@@ -1,0 +1,142 @@
+"""Shared experiment core for the paper-figure benchmarks (Fig 1a/1b).
+
+Runs centralized G-OEM + DELEDA {sync, async} x {complete, watts-strogatz}
+on one synthetic corpus and returns per-checkpoint metrics:
+
+  * relative log-perplexity error  LP/LP* - 1   (paper Fig 1a)
+  * topic-matrix distance          D(beta, beta*) (paper Fig 1b)
+  * consensus distance             ||S - mean||_F (paper eq. 3)
+
+`scale="reduced"` (default) shrinks the corpus so the full comparison runs
+in minutes on one CPU core; `scale="paper"` is the exact §4 setup (n=50,
+20 docs/node, V=100, K=5, complete + WS(100 edges, p=0.3)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import deleda
+from repro.core.evaluation import log_perplexity
+from repro.core.graph import complete_graph, watts_strogatz_graph
+from repro.core.lda import LDAConfig, beta_distance, eta_star
+from repro.core.oem import run_oem
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentScale:
+    lda: LDAConfig
+    corpus: CorpusSpec
+    n_steps: int
+    record_every: int
+    batch_size: int
+    ws_k: int
+    n_particles: int
+    probe_nodes: int = 3
+
+
+REDUCED = ExperimentScale(
+    lda=LDAConfig(n_topics=5, vocab_size=50, alpha=0.5, doc_len_max=24,
+                  n_gibbs=10, n_gibbs_burnin=5),
+    corpus=CorpusSpec(n_nodes=20, docs_per_node=10, n_test=30),
+    n_steps=150, record_every=15, batch_size=10, ws_k=4, n_particles=5)
+
+PAPER = ExperimentScale(
+    lda=LDAConfig(n_topics=5, vocab_size=100, alpha=0.5, doc_len_max=32,
+                  n_gibbs=30, n_gibbs_burnin=15),
+    corpus=CorpusSpec(n_nodes=50, docs_per_node=20, n_test=100),
+    n_steps=400, record_every=40, batch_size=20, ws_k=4, n_particles=10)
+
+
+def get_scale(name: str) -> ExperimentScale:
+    return {"reduced": REDUCED, "paper": PAPER}[name]
+
+
+def run_experiment(scale: ExperimentScale, seed: int = 0,
+                   modes=("async", "sync"),
+                   graphs=("complete", "watts_strogatz"),
+                   verbose: bool = True) -> dict:
+    key = jax.random.key(seed)
+    corpus = make_corpus(scale.lda, key, scale.corpus)
+    n = scale.corpus.n_nodes
+
+    graph_objs = {}
+    if "complete" in graphs:
+        graph_objs["complete"] = complete_graph(n)
+    if "watts_strogatz" in graphs:
+        graph_objs["watts_strogatz"] = watts_strogatz_graph(
+            n, scale.ws_k, 0.3, seed=seed)
+
+    # ---- reference perplexity under the generating parameters
+    k_eval = jax.random.key(seed + 1)
+    lp_star = float(log_perplexity(k_eval, corpus.test_words,
+                                   corpus.test_mask, corpus.beta_star,
+                                   scale.lda.alpha, scale.n_particles))
+
+    def eval_beta(stats) -> tuple[float, float]:
+        beta = eta_star(stats, scale.lda.tau)
+        lp = float(log_perplexity(k_eval, corpus.test_words,
+                                  corpus.test_mask, beta, scale.lda.alpha,
+                                  scale.n_particles))
+        return lp / lp_star - 1.0, float(beta_distance(beta,
+                                                       corpus.beta_star))
+
+    results = {"lp_star": lp_star, "runs": {}, "lambda2": {},
+               "iterations": []}
+
+    # ---- centralized G-OEM baseline (paper §4)
+    t0 = time.time()
+    oem = run_oem(scale.lda, jax.random.key(seed + 2), corpus.flat_words,
+                  corpus.flat_mask, n_steps=scale.n_steps,
+                  batch_size=scale.batch_size,
+                  record_every=scale.record_every)
+    rel, dist = zip(*[eval_beta(s) for s in oem.stats_history])
+    results["runs"]["goem"] = {"rel_perplexity": list(rel),
+                               "beta_distance": list(dist),
+                               "consensus": None,
+                               "wall_sec": time.time() - t0}
+    if verbose:
+        print(f"  goem: {time.time()-t0:.0f}s  rel={rel[-1]:+.4f} "
+              f"D={dist[-1]:.4f}")
+
+    # ---- DELEDA variants
+    for gname, graph in graph_objs.items():
+        results["lambda2"][gname] = graph.lambda2()
+        for mode in modes:
+            t0 = time.time()
+            cfg = deleda.DeledaConfig(lda=scale.lda, mode=mode,
+                                      batch_size=scale.batch_size)
+            edges, degs = deleda.make_run_inputs(graph, scale.n_steps,
+                                                 seed=seed)
+            trace = deleda.run_deleda(cfg, jax.random.key(seed + 3),
+                                      corpus.words, corpus.mask, edges,
+                                      degs, scale.n_steps,
+                                      scale.record_every)
+            # per-checkpoint: average metric over probe nodes
+            rels, dists = [], []
+            for r in range(trace.history.shape[0]):
+                vals = [eval_beta(trace.history[r, i])
+                        for i in range(scale.probe_nodes)]
+                rels.append(float(np.mean([v[0] for v in vals])))
+                dists.append(float(np.mean([v[1] for v in vals])))
+            results["runs"][f"{mode}_{gname}"] = {
+                "rel_perplexity": rels,
+                "beta_distance": dists,
+                "consensus": [float(c) for c in trace.consensus],
+                "wall_sec": time.time() - t0,
+            }
+            if verbose:
+                print(f"  {mode}_{gname}: {time.time()-t0:.0f}s "
+                      f"rel={rels[-1]:+.4f} D={dists[-1]:.4f} "
+                      f"cons={float(trace.consensus[-1]):.4f}")
+
+    results["iterations"] = list(range(scale.record_every,
+                                       scale.n_steps + 1,
+                                       scale.record_every))
+    return results

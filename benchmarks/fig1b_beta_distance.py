@@ -1,0 +1,48 @@
+"""Paper Fig 1(b): permutation-invariant distance to beta* vs iterations.
+
+Claim validated: each agent recovers the topic matrix that generated ALL
+documents without direct access to other nodes' documents (C1/C4).
+
+Usage: PYTHONPATH=src python -m benchmarks.fig1b_beta_distance
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks._deleda_experiment import get_scale, run_experiment
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="reduced",
+                    choices=["reduced", "paper"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("-o", "--out", default="results/fig1b.json")
+    ap.add_argument("--reuse", default="results/fig1a.json",
+                    help="reuse a fig1a run if present (same experiment)")
+    args = ap.parse_args(argv)
+
+    if args.reuse and os.path.exists(args.reuse):
+        with open(args.reuse) as f:
+            res = json.load(f)
+        print(f"(reusing {args.reuse})")
+    else:
+        res = run_experiment(get_scale(args.scale), seed=args.seed)
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+
+    print("\niter  " + "  ".join(f"{k:>18s}" for k in res["runs"]))
+    for i, it in enumerate(res["iterations"]):
+        row = "  ".join(f"{res['runs'][k]['beta_distance'][i]:>18.4f}"
+                        for k in res["runs"])
+        print(f"{it:5d} {row}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Beyond-paper: collective bytes of gossip sync vs all-reduce.
+
+For each assigned arch's gradient payload, model the per-device ICI bytes
+of one synchronization under allreduce / gossip-hypercube[k] / ring[k]
+(core.decentralized.collective_bytes_per_sync), and verify the model
+against HLO-parsed bytes on a small host mesh (subprocess).
+
+Usage: PYTHONPATH=src python -m benchmarks.gossip_collectives
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.configs import get_config, list_archs
+from repro.core import decentralized as dec
+
+SPECS = ["allreduce", "gossip-hypercube", "gossip-hypercube[2]",
+         "gossip-hypercube[1]", "gossip-ring[2]"]
+
+VERIFY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, AxisType
+    from repro.core import decentralized as dec
+    from repro.roofline import parse_collectives
+
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    x = jnp.zeros((8, 1024), jnp.float32)   # 4 KiB payload per node
+    for s in %r:
+        spec = dec.parse_sync(s)
+        f = jax.jit(jax.shard_map(
+            lambda v: dec.sync_tree_mesh(v, spec, ("data",), (8,)),
+            mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+        hlo = f.lower(x).compile().as_text()
+        colls = parse_collectives(hlo)
+        by = {k: int(v["bytes"]) for k, v in colls.items()}
+        print(f"HLO {s}: {by}")
+""" % SPECS)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--verify-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    print(f"per-device bytes for ONE gradient sync on {args.chips} chips "
+          f"(data-parallel axis)\n")
+    hdr = f"{'arch':18s}{'payload GB':>11s}" + "".join(
+        f"{s:>22s}" for s in SPECS)
+    print(hdr)
+    for arch in list_archs():
+        cfg = get_config(arch)
+        payload = cfg.n_params() * 4       # f32 grads
+        row = f"{arch:18s}{payload/1e9:11.2f}"
+        for s in SPECS:
+            spec = dec.parse_sync(s)
+            b = dec.collective_bytes_per_sync(spec, payload, (args.chips,))
+            row += f"{b/1e9:22.2f}"
+        print(row)
+    print("\nexactness: " + ", ".join(
+        f"{s}={dec.is_exact(dec.parse_sync(s), (args.chips,))}"
+        for s in SPECS))
+
+    if args.verify_hlo:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        r = subprocess.run([sys.executable, "-c", VERIFY], env=env,
+                           capture_output=True, text=True, timeout=600)
+        print("\n" + r.stdout + r.stderr[-500:])
+
+
+if __name__ == "__main__":
+    main()

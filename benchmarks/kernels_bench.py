@@ -1,0 +1,105 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle vs XLA.
+
+CPU wall-times of interpret-mode Pallas are NOT TPU predictions — the
+deliverable here is (a) correctness at benchmark shapes and (b) the
+jnp-oracle XLA timing as the CPU reference. Prints
+``name,us_per_call,derived`` CSV rows (derived = oracle_us / kernel_us).
+
+Usage: PYTHONPATH=src python -m benchmarks.kernels_bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lda import eta_star
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gossip_mix.ops import mix_matching
+from repro.kernels.gossip_mix.ref import mix_matching_ref
+from repro.kernels.lda_gibbs import ops as gibbs_ops
+from repro.kernels.lda_gibbs.ref import gibbs_sweeps_ref
+from repro.core.gossip import ring_matchings
+
+
+def timeit(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6, out
+
+
+def bench_lda_gibbs(rows):
+    b, l, k, v, s = 32, 24, 8, 128, 10
+    words = jax.random.randint(jax.random.key(0), (b, l), 0, v)
+    beta = eta_star(jax.random.uniform(jax.random.key(1), (k, v)))
+    beta_w = jnp.take(beta.T, words, axis=0)
+    maskf = jnp.ones((b, l))
+    u = jax.random.uniform(jax.random.key(2), (s, b, l))
+    z0 = jax.random.randint(jax.random.key(3), (b, l), 0, k)
+
+    kern = jax.jit(lambda *a: gibbs_ops.gibbs_sweeps(
+        *a, alpha=0.5, n_sweeps=s, burnin=s // 2))
+    ref = jax.jit(lambda *a: gibbs_sweeps_ref(
+        *a, alpha=0.5, n_sweeps=s, burnin=s // 2))
+    t_k, out_k = timeit(kern, beta_w, maskf, u, z0)
+    t_r, out_r = timeit(ref, beta_w, maskf, u, z0)
+    err = float(jnp.abs(out_k[0] - out_r[0]).max())
+    assert err < 1e-4, err
+    rows.append(("lda_gibbs_pallas_interp", t_k, f"oracle_us={t_r:.0f}"))
+    rows.append(("lda_gibbs_jnp_oracle", t_r, f"B={b};L={l};K={k}"))
+
+
+def bench_gossip_mix(rows):
+    n, k, v = 16, 5, 4096
+    stats = jax.random.uniform(jax.random.key(0), (n, k, v))
+    p = jnp.asarray(ring_matchings(n)[0])
+    kern = jax.jit(lambda s: mix_matching(s, p))
+    ref = jax.jit(lambda s: mix_matching_ref(s, p))
+    t_k, out_k = timeit(kern, stats)
+    t_r, out_r = timeit(ref, stats)
+    assert float(jnp.abs(out_k - out_r).max()) < 1e-6
+    rows.append(("gossip_mix_pallas_interp", t_k, f"oracle_us={t_r:.0f}"))
+    rows.append(("gossip_mix_jnp_oracle", t_r, f"n={n};KV={k}x{v}"))
+
+
+def bench_flash_attention(rows):
+    b, s, h, hkv, d = 1, 256, 4, 2, 64
+    q = jax.random.normal(jax.random.key(0), (b, s, h, d))
+    kk = jax.random.normal(jax.random.key(1), (b, s, hkv, d))
+    vv = jax.random.normal(jax.random.key(2), (b, s, hkv, d))
+    kern = jax.jit(lambda *a: flash_attention(*a, blk_q=128, blk_k=128))
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kr = kk.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vr = vv.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    ref = jax.jit(lambda a, b2, c: attention_ref(a, b2, c))
+    t_k, out_k = timeit(kern, q, kk, vv)
+    t_r, out_r = timeit(ref, qr, kr, vr)
+    err = float(jnp.abs(
+        out_k - out_r.reshape(b, h, s, d).transpose(0, 2, 1, 3)).max())
+    assert err < 1e-4, err
+    rows.append(("flash_attn_pallas_interp", t_k, f"oracle_us={t_r:.0f}"))
+    rows.append(("flash_attn_jnp_oracle", t_r, f"S={s};H={h};D={d}"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.parse_args(argv)
+    rows = []
+    bench_lda_gibbs(rows)
+    bench_gossip_mix(rows)
+    bench_flash_attention(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits a
+markdown table per mesh: the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, and a one-line "what would move the dominant
+term" note per row.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [-d results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+NOTES = {
+    ("moe", "compute"): "raise per-chip batch or cast expert FFN to int8",
+    ("moe", "memory"): "keep dispatch per-shard (avoid gathered sort), "
+                       "fuse router+gather, shrink remat footprint",
+    ("moe", "collective"): "2D expert sharding / overlap a2a with FFN",
+    ("dense", "compute"): "already near roofline; grow batch",
+    ("dense", "memory"): "less remat (checkpoint dots only), bf16 "
+                         "master-less optimizer, fused attention",
+    ("dense", "collective"): "reduce-scatter grads instead of all-reduce; "
+                             "or gossip sync (core.decentralized)",
+    ("hybrid", "memory"): "larger SSD chunk; fold conv into scan tile",
+    ("hybrid", "collective"): "replicate small B/C projections",
+    ("ssm", "memory"): "recompute mLSTM decay matrix in-kernel",
+    ("ssm", "collective"): "model axis unused at 125M: shrink mesh",
+    ("encdec", "memory"): "cache encoder K/V in bf16",
+    ("encdec", "collective"): "replicate encoder (it is tiny)",
+    ("vlm", "memory"): "same as dense + skip image tokens in loss",
+    ("vlm", "collective"): "same as dense",
+    ("encdec", "compute"): "grow batch",
+    ("hybrid", "compute"): "grow batch",
+    ("ssm", "compute"): "grow batch",
+    ("vlm", "compute"): "grow batch",
+}
+
+FAMILY = {}
+
+
+def _family(arch: str) -> str:
+    if not FAMILY:
+        from repro.configs import get_config, list_archs
+        for a in list_archs():
+            cfg = get_config(a)
+            FAMILY[cfg.name] = cfg.family
+    return FAMILY.get(arch, "dense")
+
+
+def load(dirname: str) -> dict:
+    by_mesh = defaultdict(list)
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        by_mesh[d["mesh"]].append(d)
+    return by_mesh
+
+
+def fmt_sec(x: float) -> str:
+    return f"{x:.4f}" if x >= 1e-4 else f"{x:.2e}"
+
+
+def table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful ratio | next lever |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for d in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        fam = _family(d["arch"])
+        note = NOTES.get((fam, d["dominant"]), "")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {fmt_sec(d['compute_sec'])} "
+            f"| {fmt_sec(d['memory_sec'])} "
+            f"| {fmt_sec(d['collective_sec'])} | **{d['dominant']}** "
+            f"| {d['useful_flops_ratio']:.2f} | {note} |\n")
+    return "".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("-d", "--dir", default="results/dryrun")
+    ap.add_argument("-o", "--out", default="results/roofline_tables.md")
+    args = ap.parse_args(argv)
+
+    by_mesh = load(args.dir)
+    chunks = []
+    for mesh in sorted(by_mesh):
+        chunks.append(f"### Mesh {mesh} ({by_mesh[mesh][0]['chips']} "
+                      f"chips)\n\n" + table(by_mesh[mesh]) + "\n")
+    text = "".join(chunks)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(text)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

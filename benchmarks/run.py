@@ -1,0 +1,80 @@
+"""Benchmark driver: one function per paper table/figure + system benches.
+
+Default mode is the REDUCED scale (runs end-to-end on one CPU core in
+minutes); pass --scale paper for the full §4 configuration and --skip to
+drop the slow figure reproduction.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="reduced",
+                    choices=["reduced", "paper"])
+    ap.add_argument("--skip-figures", action="store_true",
+                    help="skip the fig1a/fig1b DELEDA reproduction")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    sections = []
+
+    if not args.skip_figures:
+        print("=" * 72)
+        print("fig1a/fig1b: DELEDA vs centralized G-OEM (paper Fig 1)")
+        print("=" * 72)
+        from benchmarks import fig1a_perplexity, fig1b_beta_distance
+        fig1a_perplexity.main(["--scale", args.scale])
+        fig1b_beta_distance.main([])
+        sections.append("fig1a/fig1b")
+
+    print("=" * 72)
+    print("consensus: measured vs eq.(3) envelope")
+    print("=" * 72)
+    from benchmarks import consensus
+    consensus.main([])
+    sections.append("consensus")
+
+    print("=" * 72)
+    print("topologies: spectral gap sweep")
+    print("=" * 72)
+    from benchmarks import topologies
+    topologies.main([])
+    sections.append("topologies")
+
+    print("=" * 72)
+    print("kernels: Pallas vs oracle micro-benchmarks")
+    print("=" * 72)
+    from benchmarks import kernels_bench
+    kernels_bench.main([])
+    sections.append("kernels")
+
+    print("=" * 72)
+    print("gossip vs all-reduce collective bytes (model)")
+    print("=" * 72)
+    from benchmarks import gossip_collectives
+    gossip_collectives.main([])
+    sections.append("gossip_collectives")
+
+    print("=" * 72)
+    print("roofline tables (from dry-run artifacts, if present)")
+    print("=" * 72)
+    try:
+        from benchmarks import roofline_table
+        roofline_table.main([])
+        sections.append("roofline")
+    except Exception as e:   # no dry-run artifacts yet
+        print(f"(skipped: {e})")
+
+    print(f"\nall benchmarks done ({', '.join(sections)}) "
+          f"in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Beyond-paper: the paper's gossip averaging applied to LM training.
+
+Simulates 4 "nodes" (data shards) each holding its own parameter copy of a
+small LM. Every step: H local optimizer steps, then ONE gossip round
+(partial synchronization). Compare sync strategies:
+
+  allreduce            exact averaging (the baseline all-reduce semantics)
+  gossip-hypercube     exact in log2(n) pairwise rounds
+  gossip-ring[1]       one matching round: nodes drift, still converge
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/decentralized_lm.py
+"""
+
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm_125m")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    for sync in ["allreduce", "gossip-hypercube", "gossip-ring[1]"]:
+        print(f"\n=== sync={sync} (local_steps=2) ===")
+        train_mod.main([
+            "--arch", args.arch, "--mode", "decentralized",
+            "--sync", sync, "--local-steps", "2",
+            "--steps", str(args.steps), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--log-every", "2",
+        ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""End-to-end driver: train the ~125M xLSTM for a few hundred steps.
+
+This is the full (non-smoke) xlstm-125m assigned architecture on the
+synthetic bigram token stream — the "train a ~100M model for a few hundred
+steps" end-to-end deliverable. On CPU this takes a while at the default
+seq 256; shrink --steps/--seq for a faster demonstration (the loss curve
+is already clearly decreasing after ~30 steps).
+
+  PYTHONPATH=src python examples/lm_pretrain.py --steps 300
+"""
+
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="results/ckpt_xlstm125m")
+    args = ap.parse_args()
+
+    train_mod.main([
+        "--arch", "xlstm_125m", "--full",
+        "--steps", str(args.steps), "--batch", str(args.batch),
+        "--seq", str(args.seq), "--lr", "3e-4",
+        "--ckpt", args.ckpt, "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    main()

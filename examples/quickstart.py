@@ -1,0 +1,62 @@
+"""Quickstart: decentralized LDA in ~2 minutes on CPU.
+
+Generates a private-documents corpus over 8 agents, runs DELEDA (the
+paper's Algorithm 1, async variant), and shows each agent recovering the
+GLOBAL topic matrix without ever seeing other agents' documents.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import deleda
+from repro.core.evaluation import log_perplexity
+from repro.core.graph import complete_graph
+from repro.core.lda import LDAConfig, beta_distance, eta_star
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+
+def main():
+    # 1. a synthetic corpus: 8 agents x 12 private documents
+    lda = LDAConfig(n_topics=5, vocab_size=60, alpha=0.5, doc_len_max=24,
+                    n_gibbs=10, n_gibbs_burnin=5)
+    corpus = make_corpus(lda, jax.random.key(0),
+                         CorpusSpec(n_nodes=8, docs_per_node=12, n_test=20))
+    print(f"corpus: {corpus.words.shape[0]} agents x "
+          f"{corpus.words.shape[1]} docs, V={lda.vocab_size}, "
+          f"K={lda.n_topics}")
+
+    # 2. the communication graph and gossip schedule
+    graph = complete_graph(8)
+    print(f"graph: {graph.name}, lambda2={graph.lambda2():.3f} "
+          f"(consensus rate)")
+
+    # 3. run DELEDA (async: the two awake nodes update per iteration)
+    cfg = deleda.DeledaConfig(lda=lda, mode="async", batch_size=6)
+    edges, degs = deleda.make_run_inputs(graph, n_steps=200, seed=0)
+    trace = deleda.run_deleda(cfg, jax.random.key(1), corpus.words,
+                              corpus.mask, edges, degs, n_steps=200,
+                              record_every=50)
+
+    # 4. every agent recovered the global topics
+    k_eval = jax.random.key(2)
+    lp_star = float(log_perplexity(k_eval, corpus.test_words,
+                                   corpus.test_mask, corpus.beta_star,
+                                   lda.alpha, 5))
+    print(f"\nheld-out log-perplexity of the GENERATING model: "
+          f"{lp_star:.3f}")
+    print(f"{'agent':>6s} {'D(beta, beta*)':>15s} {'rel. perplexity':>16s}")
+    for i in [0, 3, 7]:
+        beta_i = eta_star(trace.stats[i], lda.tau)
+        d = float(beta_distance(beta_i, corpus.beta_star))
+        lp = float(log_perplexity(k_eval, corpus.test_words,
+                                  corpus.test_mask, beta_i, lda.alpha, 5))
+        print(f"{i:6d} {d:15.4f} {lp / lp_star - 1:16.4f}")
+    print(f"\nconsensus distance over time: "
+          f"{[round(float(c), 3) for c in trace.consensus]}")
+    print("agents agree without sharing documents — the paper's claim.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serve a small model with batched requests (prefill + cached decode).
+
+Exercises the same decode_step the production dry-run lowers for the
+512-chip mesh, on CPU at smoke scale, for three different architecture
+families (dense+window / hybrid SSM / enc-dec).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ["gemma2_2b", "zamba2_2p7b", "whisper_small"]:
+        print(f"\n=== serving {arch} ===")
+        serve_mod.main(["--arch", arch, "--batch", "4",
+                        "--prompt-len", "16", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Pytree checkpointing (npz-based, dependency-free)."""
+
+from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
+                                         latest_step)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,90 @@
+"""Flat-key npz checkpointing for arbitrary pytrees of arrays.
+
+Keys are key-path strings ("params/layers/attn/wq"); restore rebuilds into
+a caller-provided structure (`like=`), so namedtuples/dataclasses round-trip
+without pickling. Atomic write (tmp + rename); `step` directories allow
+keeping history: <dir>/step_000123/state.npz.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    """Flatten to npz-safe arrays. Non-native dtypes (bfloat16) are stored
+    as raw uint16 with a `<key>.__bf16__` marker."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            flat[key + ".__bf16__"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, tree, step: int) -> str:
+    """Write <directory>/step_<step>/state.npz atomically. Returns path."""
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    fd, tmp = tempfile.mkstemp(dir=step_dir, suffix=".npz.tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        final = os.path.join(step_dir, "state.npz")
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like, step: Optional[int] = None):
+    """Restore into the structure of `like` (arrays or ShapeDtypeStructs)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "state.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    import ml_dtypes
+    for path_elems, leaf in paths:
+        key = "/".join(_path_str(p) for p in path_elems)
+        if key + ".__bf16__" in data:
+            arr = data[key + ".__bf16__"].view(ml_dtypes.bfloat16)
+        else:
+            arr = data[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

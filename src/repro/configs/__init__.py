@@ -1,0 +1,7 @@
+"""Architecture configs: the 10 assigned archs + the paper's LDA setup."""
+
+from repro.configs.base import (ModelConfig, InputShape, INPUT_SHAPES,
+                                get_config, list_archs, smoke_variant)
+
+__all__ = ["ModelConfig", "InputShape", "INPUT_SHAPES", "get_config",
+           "list_archs", "smoke_variant"]

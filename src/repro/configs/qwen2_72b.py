@@ -1,0 +1,23 @@
+"""qwen2-72b [dense] — GQA with QKV bias [arXiv:2407.10671].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, head_dim=128,
+rope theta 1e6. Adafactor at 72B.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    optimizer="adafactor",
+    supports_long_context=False,
+)

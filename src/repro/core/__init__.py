@@ -1,0 +1,23 @@
+"""DELEDA core: LDA + Gibbs Online EM + gossip decentralization.
+
+Layout:
+  lda.py            LDA model, M-step eta*(s), generative process, D(beta,beta*)
+  gibbs.py          collapsed-Gibbs E-step (pure-jnp oracle for the kernel)
+  oem.py            centralized G-OEM baseline (paper eq. 2)
+  graph.py          communication graphs, W matrices, lambda2 / spectral gap
+  gossip.py         gossip schedules + mixing (simulation & mesh collectives)
+  deleda.py         Algorithm 1 (sync) + async variant + consensus diagnostics
+  decentralized.py  gossip sync for arbitrary pytrees (the generalization)
+  evaluation.py     left-to-right held-out perplexity (Wallach et al. 2009)
+"""
+
+from repro.core.lda import (LDAConfig, LDAState, beta_distance, eta_star,
+                            init_state, init_stats)
+from repro.core.deleda import DeledaConfig, DeledaTrace, run_deleda
+from repro.core.decentralized import SyncSpec, parse_sync
+
+__all__ = [
+    "LDAConfig", "LDAState", "beta_distance", "eta_star", "init_state",
+    "init_stats", "DeledaConfig", "DeledaTrace", "run_deleda", "SyncSpec",
+    "parse_sync",
+]

@@ -1,0 +1,199 @@
+"""Gossip averaging: schedules, in-simulation mixing, and TPU-mesh collectives.
+
+Two execution substrates for the same communication pattern:
+
+1. **Simulation** (paper-faithful, n arbitrary): the n agents' iterates are
+   stacked on a leading axis, ``S`` of shape ``[n, ...]``; a gossip event
+   applies the averaging matrix ``W_e = I - (1/2)(e_i - e_j)(e_i - e_j)^T``
+   to the node axis. Schedules (random edges / random maximal matchings) are
+   pre-drawn host-side so the whole trajectory folds into one ``lax.scan``.
+
+2. **Mesh collectives** (TPU adaptation, n = mesh axis size): a gossip round
+   is a ``jax.lax.ppermute``-and-average across a mesh axis inside
+   ``shard_map``. Hypercube rounds (partner = rank XOR 2^r) reach *exact*
+   consensus in log2(n) rounds — recursive-halving all-reduce re-derived as
+   gossip; ring matchings give the partial, bandwidth-cheap variant. This is
+   the knob `sync="gossip-hypercube[k]"` exposed by core/decentralized.py.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, random_matching
+
+
+# ----------------------------------------------------------------------------
+# Host-side schedule generation
+# ----------------------------------------------------------------------------
+
+def draw_edge_schedule(graph: Graph, n_steps: int,
+                       rng: np.random.Generator) -> np.ndarray:
+    """[T, 2] int32: one uniformly-random edge per iteration (Algorithm 1 l.3)."""
+    idx = rng.integers(0, graph.n_edges, size=n_steps)
+    return graph.edges[idx].astype(np.int32)
+
+
+def draw_matching_schedule(graph: Graph, n_rounds: int,
+                           rng: np.random.Generator) -> np.ndarray:
+    """[T, n] int32 partner vectors: p[t, i] = j if (i, j) matched else i.
+
+    Each round is a random maximal matching — the multi-edge synchronous
+    gossip round used by the `gossip_mix` kernel and the mesh trainer.
+    """
+    n = graph.n_nodes
+    out = np.empty((n_rounds, n), np.int32)
+    for t in range(n_rounds):
+        p = np.arange(n, dtype=np.int32)
+        for i, j in random_matching(graph, rng):
+            p[i], p[j] = j, i
+        out[t] = p
+    return out
+
+
+def hypercube_partners(n: int) -> np.ndarray:
+    """[log2(n), n] partner vectors p[r, i] = i XOR 2^r (exact consensus)."""
+    if n & (n - 1):
+        raise ValueError(f"hypercube gossip needs power-of-two n, got {n}")
+    log2n = n.bit_length() - 1
+    ranks = np.arange(n, dtype=np.int32)
+    return np.stack([ranks ^ (1 << r) for r in range(log2n)], axis=0)
+
+
+def ring_matchings(n: int) -> np.ndarray:
+    """[2, n] even/odd ring matchings: round 0 pairs (0,1)(2,3)..., round 1
+    pairs (1,2)(3,4)...; for odd n the leftover node self-pairs."""
+    p_even = np.arange(n, dtype=np.int32)
+    p_odd = np.arange(n, dtype=np.int32)
+    for i in range(0, n - 1, 2):
+        p_even[i], p_even[i + 1] = i + 1, i
+    for i in range(1, n - 1, 2):
+        p_odd[i], p_odd[i + 1] = i + 1, i
+    if n % 2 == 0 and n > 2:
+        # close the ring on the odd round: pair (n-1, 0)
+        p_odd[n - 1], p_odd[0] = 0, n - 1
+    return np.stack([p_even, p_odd], axis=0)
+
+
+# ----------------------------------------------------------------------------
+# Simulation-substrate mixing (node axis is a real array axis)
+# ----------------------------------------------------------------------------
+
+def mix_edge(stats: jax.Array, i: jax.Array, j: jax.Array) -> jax.Array:
+    """Apply W_(i,j) to the node axis: s_i, s_j <- (s_i + s_j)/2.
+
+    stats: [n, ...]; i, j scalar int32 (may be traced). One gossip event.
+    """
+    avg = 0.5 * (stats[i] + stats[j])
+    return stats.at[i].set(avg).at[j].set(avg)
+
+
+def mix_matching(stats: jax.Array, partners: jax.Array) -> jax.Array:
+    """Apply a whole matching at once: s_i <- (s_i + s_{p[i]})/2.
+
+    partners: [n] int32 with p[p[i]] == i (self-partner = no-op). This is the
+    pure-jnp oracle for kernels/gossip_mix.
+    """
+    return 0.5 * (stats + stats[partners])
+
+
+def mixing_matrix_edge(n: int, i: int, j: int) -> np.ndarray:
+    """Dense W_e = I - (1/2)(e_i - e_j)(e_i - e_j)^T (for tests/analysis)."""
+    v = np.zeros(n)
+    v[i], v[j] = 1.0, -1.0
+    return np.eye(n) - 0.5 * np.outer(v, v)
+
+
+def mixing_matrix_matching(partners: np.ndarray) -> np.ndarray:
+    """Dense doubly-stochastic W of a matching partner vector."""
+    n = len(partners)
+    w = np.zeros((n, n))
+    for i, p in enumerate(partners):
+        if p == i:
+            w[i, i] = 1.0
+        else:
+            w[i, i] = w[i, p] = 0.5
+    return w
+
+
+def consensus_distance(stats: jax.Array) -> jax.Array:
+    """||S - mean(S) 1^T||_F — the left side of paper eq. (3)."""
+    mean = stats.mean(axis=0, keepdims=True)
+    return jnp.linalg.norm((stats - mean).reshape(stats.shape[0], -1))
+
+
+def consensus_envelope(lambda2: float, rhos: np.ndarray,
+                       g_norm: float) -> np.ndarray:
+    """Paper eq. (3) upper envelope: sum_r rho_r lam2^{(t-r)/2} ||G||.
+
+    rhos: [T] step sizes. Returns [T] envelope values (host-side diagnostic
+    against which the measured consensus distance is plotted).
+    """
+    t_max = len(rhos)
+    env = np.zeros(t_max)
+    lam_sqrt = np.sqrt(max(lambda2, 0.0))
+    acc = 0.0
+    for t in range(t_max):
+        acc = acc * lam_sqrt + rhos[t] * g_norm
+        env[t] = acc
+    return env
+
+
+# ----------------------------------------------------------------------------
+# Mesh-substrate gossip (shard_map collectives over a named axis)
+# ----------------------------------------------------------------------------
+
+def _ppermute_pairs(partners: np.ndarray) -> list[tuple[int, int]]:
+    """ppermute permutation (src, dst) realizing a partner exchange."""
+    return [(int(i), int(p)) for i, p in enumerate(partners) if p != i]
+
+
+def gossip_round_mesh(tree, partners: np.ndarray, axis_name: str):
+    """One matching round over a mesh axis, inside shard_map.
+
+    Every leaf x (sharded over `axis_name`) becomes (x + x_partner)/2, where
+    the exchange is a single bidirectional ``lax.ppermute`` — i.e. one
+    neighbor hop of ICI traffic, vs. a full all-reduce.
+    """
+    perm = _ppermute_pairs(partners)
+    if not perm:
+        return tree
+
+    def mix(x):
+        other = jax.lax.ppermute(x, axis_name, perm)
+        # self-partnered ranks receive nothing (ppermute fills zeros);
+        # for them `other` must act as x so the average is a no-op.
+        idx = jax.lax.axis_index(axis_name)
+        selfp = jnp.asarray(partners, jnp.int32)[idx] == idx
+        other = jnp.where(selfp, x, other)
+        return 0.5 * (x + other)
+
+    return jax.tree.map(mix, tree)
+
+
+def gossip_hypercube_mesh(tree, axis_name: str, axis_size: int,
+                          n_rounds: int | None = None):
+    """k hypercube rounds over a mesh axis (k = log2(n) gives exact consensus).
+
+    Round r partners rank i with i XOR 2^r. After all log2(n) rounds every
+    rank holds the exact axis-mean — identical result to ``lax.pmean`` but
+    expressed as a sequence of pairwise exchanges; with n_rounds < log2(n)
+    it is a *partial* all-reduce trading consensus error for ICI bytes.
+    """
+    all_rounds = hypercube_partners(axis_size)
+    k = len(all_rounds) if n_rounds is None else min(n_rounds, len(all_rounds))
+    for r in range(k):
+        tree = gossip_round_mesh(tree, all_rounds[r], axis_name)
+    return tree
+
+
+def gossip_ring_mesh(tree, axis_name: str, axis_size: int, n_rounds: int = 2):
+    """k alternating even/odd ring-matching rounds over a mesh axis."""
+    rounds = ring_matchings(axis_size)
+    for r in range(n_rounds):
+        tree = gossip_round_mesh(tree, rounds[r % 2], axis_name)
+    return tree

@@ -1,0 +1,141 @@
+"""Latent Dirichlet Allocation model: parameters, M-step, sufficient statistics.
+
+Exponential-family view (paper eq. (1)):
+    p(X, h | eta) = a(X, h) exp[<phi(eta), S(X, h)> - psi(eta)]
+with X a document (bag of words), h = (Z, theta) hidden, eta = (beta, alpha).
+
+The sufficient statistic carried by every agent is the K x V matrix
+    s[k, v] = E-weighted count of (topic k, word v) assignments,
+normalized *per document* then step-size-averaged by online EM (oem.py).
+The M-step for beta is row normalization of the (smoothed) statistic:
+    beta = eta_star(s);   beta[k] ~ (s[k] + tau) / sum_v (s[k] + tau).
+
+alpha is kept fixed during inference (paper S4: "we update beta at each
+iteration and let alpha = alpha* fixed, as often done in previous work").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    """Static configuration of an LDA model instance."""
+
+    n_topics: int                  # K
+    vocab_size: int                # V
+    alpha: float = 0.5             # symmetric Dirichlet prior on theta
+    tau: float = 1e-2              # Dirichlet smoothing of the M-step for beta
+    n_gibbs: int = 30              # Gibbs sweeps per E-step
+    n_gibbs_burnin: int = 15       # sweeps discarded before averaging samples
+    doc_len_max: int = 64          # padded document length (tokens)
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.n_topics < 2:
+            raise ValueError(f"n_topics must be >= 2, got {self.n_topics}")
+        if self.vocab_size < 2:
+            raise ValueError(f"vocab_size must be >= 2, got {self.vocab_size}")
+        if not 0 < self.n_gibbs_burnin < self.n_gibbs:
+            raise ValueError(
+                f"need 0 < n_gibbs_burnin < n_gibbs, got "
+                f"{self.n_gibbs_burnin} / {self.n_gibbs}")
+
+
+def init_stats(config: LDAConfig, key: jax.Array) -> jax.Array:
+    """Random positive initial sufficient statistics s0, shape [K, V].
+
+    G-OEM initializes s from a flat Dirichlet-ish draw so that eta_star(s0)
+    is a valid (random) topic matrix.
+    """
+    g = jax.random.gamma(key, 1.0, (config.n_topics, config.vocab_size))
+    return (g / g.sum(axis=1, keepdims=True)).astype(config.dtype)
+
+
+def eta_star(stats: jax.Array, tau: float = 1e-2) -> jax.Array:
+    """M-step: maximum-likelihood topic matrix from sufficient statistics.
+
+    eta*(s) = argmax_eta <phi(eta), s> - psi(eta)  (multinomial MLE), with a
+    small Dirichlet smoothing tau > 0 so every word keeps non-zero mass (also
+    the paper's boundedness condition on E||G^r||: alpha, tau > r > 0).
+    """
+    smoothed = stats + tau
+    return smoothed / smoothed.sum(axis=-1, keepdims=True)
+
+
+def log_eta_star(stats: jax.Array, tau: float = 1e-2) -> jax.Array:
+    """log eta*(s), computed stably."""
+    smoothed = stats + tau
+    return jnp.log(smoothed) - jnp.log(smoothed.sum(axis=-1, keepdims=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LDAState:
+    """Carried inference state of one (centralized) G-OEM learner."""
+
+    stats: jax.Array               # [K, V] sufficient statistics s
+    step: jax.Array                # scalar int32 iteration counter
+
+    def beta(self, tau: float = 1e-2) -> jax.Array:
+        return eta_star(self.stats, tau)
+
+
+def init_state(config: LDAConfig, key: jax.Array) -> LDAState:
+    return LDAState(stats=init_stats(config, key), step=jnp.zeros((), jnp.int32))
+
+
+# ----------------------------------------------------------------------------
+# Generative process (used by data/lda_synthetic.py and tests)
+# ----------------------------------------------------------------------------
+
+def sample_topic_matrix(config: LDAConfig, key: jax.Array,
+                        concentration: float = 0.1) -> jax.Array:
+    """Draw a ground-truth topic matrix beta* ~ Dirichlet(concentration)^K."""
+    g = jax.random.gamma(
+        key, concentration, (config.n_topics, config.vocab_size))
+    g = jnp.maximum(g, 1e-30)
+    return (g / g.sum(axis=1, keepdims=True)).astype(config.dtype)
+
+
+def sample_document(config: LDAConfig, key: jax.Array, beta: jax.Array,
+                    length: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Generate one padded document via the LDA generative process.
+
+    Returns (words [doc_len_max] int32, mask [doc_len_max] bool). `length`
+    may be traced (e.g. Poisson-drawn); tokens past `length` are masked.
+    """
+    k_theta, k_z, k_w = jax.random.split(key, 3)
+    theta = jax.random.dirichlet(
+        k_theta, jnp.full((config.n_topics,), config.alpha))
+    z = jax.random.categorical(
+        k_z, jnp.log(theta)[None, :], axis=-1,
+        shape=(config.doc_len_max,))                      # [L]
+    logits = jnp.log(jnp.maximum(beta, 1e-30))[z]         # [L, V]
+    words = jax.random.categorical(k_w, logits, axis=-1).astype(jnp.int32)
+    mask = jnp.arange(config.doc_len_max) < length
+    return jnp.where(mask, words, 0).astype(jnp.int32), mask
+
+
+# ----------------------------------------------------------------------------
+# Permutation-invariant distance to the generating topic matrix (paper S4)
+# ----------------------------------------------------------------------------
+
+def beta_distance(beta: jax.Array, beta_star: jax.Array) -> jax.Array:
+    """D(beta, beta*) = min_M ||M beta - beta*||_F / ||beta*||_F.
+
+    Closed form via least squares: M = beta* beta^T (beta beta^T)^{-1}.
+    Invariant to row (topic) permutations of beta.
+    """
+    beta = beta.astype(jnp.float32)
+    beta_star = beta_star.astype(jnp.float32)
+    gram = beta @ beta.T                                   # [K, K]
+    m = beta_star @ beta.T @ jnp.linalg.inv(
+        gram + 1e-10 * jnp.eye(gram.shape[0]))
+    resid = m @ beta - beta_star
+    return jnp.linalg.norm(resid) / jnp.linalg.norm(beta_star)

@@ -1,0 +1,97 @@
+"""Gibbs Online EM (G-OEM) for LDA — the centralized baseline learner.
+
+Implements the sufficient-statistics update (paper eq. (2)):
+
+    s^{t+1} = (1 - rho_{t+1}) s^t
+              + rho_{t+1} E_{p(h|X_{t+1}, eta*(s^t))}[S(X_{t+1}, h_{t+1})]
+
+with the intractable expectation approximated by collapsed Gibbs sampling
+(gibbs.py) and the M-step eta*(s) from lda.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gibbs as gibbs_mod
+from repro.core.lda import LDAConfig, LDAState, eta_star, init_state
+
+
+# ----------------------------------------------------------------------------
+# Step-size schedules rho_t (Cappe & Moulines 2009 require sum rho = inf,
+# sum rho^2 < inf; kappa in (1/2, 1]).
+# ----------------------------------------------------------------------------
+
+def make_rho_schedule(kind: str = "power", *, kappa: float = 0.6,
+                      t0: float = 10.0, rho0: float = 1.0,
+                      constant: float = 0.05) -> Callable[[jax.Array], jax.Array]:
+    """Return rho(t) for t = 1, 2, ... (t may be a traced int array)."""
+    if kind == "power":
+        def rho(t):
+            return rho0 * (t0 + t.astype(jnp.float32)) ** (-kappa)
+    elif kind == "constant":
+        def rho(t):
+            return jnp.full((), constant, jnp.float32)
+    else:
+        raise ValueError(f"unknown rho schedule {kind!r}")
+    return rho
+
+
+def oem_update(config: LDAConfig, state: LDAState, key: jax.Array,
+               words: jax.Array, mask: jax.Array,
+               rho_fn: Callable[[jax.Array], jax.Array],
+               estep=None) -> LDAState:
+    """One G-OEM step on a minibatch of documents (eq. 2)."""
+    estep = estep or gibbs_mod.gibbs_estep
+    t = state.step + 1
+    beta = eta_star(state.stats, config.tau)
+    result = estep(config, key, words, mask, beta)
+    rho = rho_fn(t).astype(state.stats.dtype)
+    new_stats = (1.0 - rho) * state.stats + rho * result.stats
+    return LDAState(stats=new_stats, step=t)
+
+
+class OEMTrace(NamedTuple):
+    state: LDAState
+    stats_history: jax.Array      # [T_record, K, V] recorded stats snapshots
+
+
+@partial(jax.jit, static_argnames=("config", "n_steps", "batch_size",
+                                   "record_every", "rho_kind"))
+def run_oem(config: LDAConfig, key: jax.Array, words: jax.Array,
+            mask: jax.Array, n_steps: int, batch_size: int,
+            record_every: int = 10, rho_kind: str = "power",
+            rho_kappa: float = 0.6, rho_t0: float = 10.0) -> OEMTrace:
+    """Run centralized G-OEM for `n_steps`, sampling `batch_size` docs
+    uniformly at random per step from the corpus (paper S4 baseline).
+
+    words: [D, L] int32, mask: [D, L] bool. Records stats snapshots every
+    `record_every` steps (n_steps must be divisible by record_every).
+    """
+    if n_steps % record_every != 0:
+        raise ValueError("n_steps must be divisible by record_every")
+    rho_fn = make_rho_schedule(rho_kind, kappa=rho_kappa, t0=rho_t0)
+    d = words.shape[0]
+    k_init, k_run = jax.random.split(key)
+    state0 = init_state(config, k_init)
+
+    def step(state, k):
+        k_sel, k_gibbs = jax.random.split(k)
+        idx = jax.random.randint(k_sel, (batch_size,), 0, d)
+        state = oem_update(config, state, k_gibbs, words[idx], mask[idx],
+                           rho_fn)
+        return state, None
+
+    def record_block(state, k):
+        keys = jax.random.split(k, record_every)
+        state, _ = jax.lax.scan(step, state, keys)
+        return state, state.stats
+
+    keys = jax.random.split(k_run, n_steps // record_every)
+    state, history = jax.lax.scan(record_block, state0, keys)
+    return OEMTrace(state=state, stats_history=history)

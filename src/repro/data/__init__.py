@@ -1,0 +1,7 @@
+"""Data substrate: synthetic LDA corpora and the LM token pipeline."""
+
+from repro.data.lda_synthetic import SyntheticCorpus, make_corpus
+from repro.data.lm_pipeline import TokenPipeline, make_lm_batch_specs
+
+__all__ = ["SyntheticCorpus", "make_corpus", "TokenPipeline",
+           "make_lm_batch_specs"]

@@ -1,0 +1,93 @@
+"""LM token pipeline for the transformer substrate.
+
+Deterministic synthetic token streams (no external datasets offline): a
+seeded, jit-able generator that produces (tokens, targets, mask) batches of
+the assigned input shapes, plus the abstract ``ShapeDtypeStruct`` specs the
+dry-run lowers against. The pipeline is sharding-aware: batches are produced
+host-side per data shard and assembled with ``jax.make_array_from_callback``
+so no single host materializes the global batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LMBatch(NamedTuple):
+    tokens: jax.Array    # [B, S] int32 inputs
+    targets: jax.Array   # [B, S] int32 next-token labels
+    mask: jax.Array      # [B, S] bool loss mask
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    """Synthetic but statistically non-trivial token stream.
+
+    Tokens follow a Zipfian marginal with a local bigram structure
+    (next ~ 0.7 * bigram(cur) + 0.3 * zipf), so that a model trained on it
+    has real signal to fit — loss decreasing is a meaningful smoke check.
+    """
+
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+
+    def _zipf_probs(self) -> np.ndarray:
+        ranks = np.arange(1, self.vocab_size + 1)
+        p = 1.0 / ranks
+        return p / p.sum()
+
+    def batches(self) -> Iterator[LMBatch]:
+        rng = np.random.default_rng(self.seed)
+        zipf = self._zipf_probs()
+        # deterministic "bigram" successor: next = (17*cur + 3) % V with noise
+        while True:
+            toks = np.empty((self.batch_size, self.seq_len + 1), np.int32)
+            toks[:, 0] = rng.choice(self.vocab_size, self.batch_size, p=zipf)
+            noise = rng.random((self.batch_size, self.seq_len))
+            fresh = rng.choice(self.vocab_size,
+                               (self.batch_size, self.seq_len), p=zipf)
+            for t in range(self.seq_len):
+                succ = (17 * toks[:, t] + 3) % self.vocab_size
+                toks[:, t + 1] = np.where(noise[:, t] < 0.7, succ,
+                                          fresh[:, t])
+            yield LMBatch(
+                tokens=jnp.asarray(toks[:, :-1]),
+                targets=jnp.asarray(toks[:, 1:]),
+                mask=jnp.ones((self.batch_size, self.seq_len), bool),
+            )
+
+    def sharded_batch(self, sharding) -> LMBatch:
+        """One batch materialized directly into `sharding` (per-shard gen)."""
+        rng = np.random.default_rng(self.seed)
+        zipf = self._zipf_probs()
+
+        def gen(index) -> np.ndarray:
+            shape = tuple(len(range(*idx.indices(dim)))
+                          for idx, dim in zip(index, (self.batch_size,
+                                                      self.seq_len)))
+            local = np.random.default_rng(
+                self.seed + hash(str(index)) % (2**31)).choice(
+                self.vocab_size, shape, p=zipf).astype(np.int32)
+            return local
+
+        tokens = jax.make_array_from_callback(
+            (self.batch_size, self.seq_len), sharding, gen)
+        targets = jnp.roll(tokens, -1, axis=1)
+        return LMBatch(tokens=tokens, targets=targets,
+                       mask=jnp.ones(tokens.shape, bool))
+
+
+def make_lm_batch_specs(batch_size: int, seq_len: int) -> dict:
+    """Abstract train-step batch for .lower() (dry-run path)."""
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.bool_),
+    }

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  lda_gibbs/        collapsed-Gibbs E-step inner loop (the G-OEM hot spot)
+  gossip_mix/       blocked pairwise matching mix of sufficient statistics
+  flash_attention/  blocked-softmax attention fwd (GQA / window / softcap)
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper) and ref.py (pure-jnp oracle used by the allclose tests).
+Kernels are written for TPU VMEM tiling and validated on CPU with
+``interpret=True``.
+"""

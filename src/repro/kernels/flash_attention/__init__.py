@@ -1,0 +1,5 @@
+"""Pallas TPU kernel: blocked-softmax (flash) attention forward."""
+
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["flash_attention"]

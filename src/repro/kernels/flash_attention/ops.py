@@ -1,0 +1,54 @@
+"""Public jit'd wrapper for flash attention: [B, S, H, D] API + padding."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+
+
+def _pad_len(s: int, blk: int) -> int:
+    return -(-s // blk) * blk
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                                   "blk_q", "blk_k", "q_offset", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    blk_q: int = 128, blk_k: int = 128, q_offset: int = 0,
+                    interpret: bool = True) -> jax.Array:
+    """Multi-head attention via the Pallas kernel.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, H_kv, D]. Returns [B, Sq, H, D].
+    Pads Sq/Sk up to tile multiples; padded keys are masked out by giving
+    them positions beyond every query (causal) — with causal=False padded
+    keys would attend, so Sk must already be a tile multiple in that case.
+    """
+    b, sq, h, d = q.shape
+    _, sk, h_kv, _ = k.shape
+    blk_q = min(blk_q, _pad_len(sq, 8))
+    sq_p, sk_p = _pad_len(sq, blk_q), _pad_len(sk, blk_k)
+    if not causal and (sq_p != sq or sk_p != sk):
+        raise ValueError("non-causal attention requires tile-aligned S")
+
+    qt = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kt = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vt = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+
+    # [B, S, H, D] -> [B*H, S, D]
+    qt = qt.transpose(0, 2, 1, 3).reshape(b * h, sq_p, d)
+    kt = kt.transpose(0, 2, 1, 3).reshape(b * h_kv, sk_p, d)
+    vt = vt.transpose(0, 2, 1, 3).reshape(b * h_kv, sk_p, d)
+
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        scale=scale, blk_q=blk_q, blk_k=blk_k, q_offset=q_offset,
+        interpret=interpret)
+
+    out = out.reshape(b, h, sq_p, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernel: blocked pairwise matching mix of node statistics."""
+
+from repro.kernels.gossip_mix.ops import mix_matching
+
+__all__ = ["mix_matching"]

@@ -1,0 +1,31 @@
+"""Public jit'd wrapper for the gossip_mix Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gossip_mix.gossip_mix import mix_matching_pallas
+
+
+def _v_block(v: int, requested: int) -> int:
+    """Largest divisor of v not exceeding `requested` (prefer 128-multiples)."""
+    for cand in range(min(requested, v), 0, -1):
+        if v % cand == 0:
+            return cand
+    return v
+
+
+@partial(jax.jit, static_argnames=("block_v", "interpret"))
+def mix_matching(stats: jax.Array, partners: jax.Array,
+                 block_v: int = 512, interpret: bool = True) -> jax.Array:
+    """Kernel-backed matching mix; accepts any V (auto block size).
+
+    Drop-in for `repro.core.gossip.mix_matching`.
+    """
+    n, k, v = stats.shape
+    bv = _v_block(v, block_v)
+    return mix_matching_pallas(stats, partners.astype(jnp.int32),
+                               block_v=bv, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for gossip_mix: one matching round of pairwise averaging."""
+
+from __future__ import annotations
+
+import jax
+
+
+def mix_matching_ref(stats: jax.Array, partners: jax.Array) -> jax.Array:
+    """S_out[i] = (S[i] + S[p[i]]) / 2. stats [n, ...], partners [n] int32."""
+    return 0.5 * (stats + stats[partners])

@@ -1,0 +1,5 @@
+"""Pallas TPU kernel for the collapsed-Gibbs E-step (G-OEM hot spot)."""
+
+from repro.kernels.lda_gibbs.ops import gibbs_estep, gibbs_sweeps
+
+__all__ = ["gibbs_estep", "gibbs_sweeps"]

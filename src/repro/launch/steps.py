@@ -1,0 +1,338 @@
+"""Step builders: train_step / prefill_step / decode_step per (arch, shape),
+with abstract inputs (ShapeDtypeStruct) and shape-aware shardings.
+
+This is the single source of truth used by the dry-run, the trainer and the
+server: `build(cfg, shape, mesh)` returns the jitted step with in/out
+shardings bound, plus the abstract inputs it lowers against — so what the
+dry-run compiles is exactly what the real launchers run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import encdec as ed
+from repro.models import frontends as fe
+from repro.models import mamba2 as m2
+from repro.models import transformer as tf
+from repro.models import xlstm as xl
+from repro.optim import make_optimizer, make_lr_schedule
+from repro.sharding import (DP_ONLY_RULES, FSDP_RULES, LOGICAL_RULES,
+                            spec_for_shape, tree_shardings_for)
+
+FSDP_PARAM_THRESHOLD = 8e9
+DP_ONLY_THRESHOLD = 1e9     # SPerf E7: sub-1B archs run pure DP
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def rules_for(cfg: ModelConfig):
+    n = cfg.n_params()
+    if n < DP_ONLY_THRESHOLD:
+        return DP_ONLY_RULES     # TP collectives dwarf sub-1B matmuls
+    return FSDP_RULES if n > FSDP_PARAM_THRESHOLD else LOGICAL_RULES
+
+
+# ----------------------------------------------------------------------------
+# Abstract params / state / caches, and their logical axes
+# ----------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    init = (ed.init_encdec if cfg.family == "encdec"
+            else tf.init_decoder_lm)
+    return jax.eval_shape(lambda k: init(cfg, k), jax.random.key(0))
+
+
+def params_axes(cfg: ModelConfig):
+    return (ed.encdec_axes(cfg) if cfg.family == "encdec"
+            else tf.decoder_lm_axes(cfg))
+
+
+def opt_state_axes(cfg: ModelConfig, abs_params, p_axes):
+    """Optimizer-state axes mirror the param axes (factored stats drop dims)."""
+    if cfg.optimizer == "adamw":
+        return {"m": p_axes, "v": p_axes}
+    if cfg.optimizer == "adafactor":
+        def one(shp, axes):
+            if len(shp.shape) >= 2:
+                return {"vr": tuple(axes[:-1]),
+                        "vc": tuple(axes[:-2]) + tuple(axes[-1:])}
+            return {"v": tuple(axes)}
+        return jax.tree.map(one, abs_params, p_axes,
+                            is_leaf=lambda x: hasattr(x, "shape"))
+    if cfg.optimizer == "sgd":
+        return {"mu": p_axes}
+    raise ValueError(cfg.optimizer)
+
+
+def _is_axes_leaf(x) -> bool:
+    return (isinstance(x, tuple) and type(x) is tuple
+            and all(isinstance(a, (str, type(None))) for a in x))
+
+
+def caches_axes(cfg: ModelConfig):
+    kv = jax.tree.map(lambda a: ("layers",) + a, attn_mod.kv_cache_axes(),
+                      is_leaf=_is_axes_leaf)
+    if cfg.family in ("dense", "vlm", "moe"):
+        return kv
+    if cfg.family == "hybrid":
+        mamba = m2.MambaCache(conv=("layers", "batch", "seq", "mlp"),
+                              ssm=("layers", "batch", "heads", "head_dim",
+                                   "state"))
+        return {"mamba": mamba, "attn": kv}
+    if cfg.family == "ssm":
+        ml = xl.MLSTMCache(c=("layers", "batch", "heads", "head_dim",
+                              "state"),
+                           n=("layers", "batch", "heads", "head_dim"),
+                           m=("layers", "batch", "heads"),
+                           conv=("layers", "batch", "seq", "mlp"))
+        sl = xl.SLSTMCache(c=("layers", "batch", "embed"),
+                           n=("layers", "batch", "embed"),
+                           h=("layers", "batch", "embed"),
+                           m=("layers", "batch", "embed"))
+        return {"mlstm": ml, "slstm": sl}
+    if cfg.family == "encdec":
+        cross = attn_mod.CrossCache(
+            k=("layers", "batch", "frames", "kv_heads", "head_dim"),
+            v=("layers", "batch", "frames", "kv_heads", "head_dim"))
+        return ed.EncDecCaches(self_kv=kv, cross=cross)
+    raise ValueError(cfg.family)
+
+
+# ----------------------------------------------------------------------------
+# Input specs (abstract batches)
+# ----------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this step."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        s_text = s - (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s_text), i32),
+            "targets": jax.ShapeDtypeStruct(
+                (b, s if cfg.family == "vlm" else s_text), i32),
+            "mask": jax.ShapeDtypeStruct(
+                (b, s if cfg.family == "vlm" else s_text), jnp.bool_),
+        }
+        if cfg.family == "vlm":
+            specs["image_embeds"] = fe.image_patches_spec(cfg, b)
+            # loss path slices image positions off; targets/mask cover text
+            specs["targets"] = jax.ShapeDtypeStruct((b, s_text), i32)
+            specs["mask"] = jax.ShapeDtypeStruct((b, s_text), jnp.bool_)
+        if cfg.family == "encdec":
+            specs["frames"] = fe.audio_frames_spec(cfg, b)
+        return specs
+
+    if shape.kind == "prefill":
+        s_text = s - (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s_text), i32)}
+        if cfg.family == "vlm":
+            specs["image_embeds"] = fe.image_patches_spec(cfg, b)
+        if cfg.family == "encdec":
+            specs["frames"] = fe.audio_frames_spec(cfg, b)
+        return specs
+
+    # decode: ONE new token against a cache of seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "index": jax.ShapeDtypeStruct((), i32),
+        "caches": abstract_caches(cfg, b, s),
+    }
+    return specs
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        frames = fe.audio_frames_spec(cfg, batch)
+        abs_p = abstract_params(cfg)
+        return jax.eval_shape(
+            lambda p, f: ed.init_encdec_caches(cfg, p, f, batch, max_len),
+            abs_p, frames)
+    return jax.eval_shape(lambda: tf.init_caches(cfg, batch, max_len))
+
+
+# ----------------------------------------------------------------------------
+# Step functions
+# ----------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    if cfg.family == "encdec":
+        return ed.encdec_loss(cfg, params, batch)
+    return tf.lm_loss(cfg, params, batch)
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4):
+    opt = make_optimizer(cfg.optimizer, make_lr_schedule("cosine", lr))
+
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch))(state.params)
+        new_params, new_opt = opt.update(grads, state.opt, state.params,
+                                         state.step)
+        metrics = {"loss": loss,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(g.astype(jnp.float32) ** 2)
+                       for g in jax.tree.leaves(grads)))}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch: dict):
+        if cfg.family == "encdec":
+            out = ed.forward_encdec(cfg, params, batch["tokens"],
+                                    batch["frames"])
+        else:
+            out = tf.forward(cfg, params, batch["tokens"],
+                             image_embeds=batch.get("image_embeds"))
+        return out.logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_fn(params, batch: dict):
+        if cfg.family == "encdec":
+            out = ed.decode_step_encdec(cfg, params, batch["tokens"],
+                                        batch["caches"], batch["index"])
+        else:
+            out = tf.decode_step(cfg, params, batch["tokens"],
+                                 batch["caches"], batch["index"])
+        return out.logits[:, 0], out.caches
+
+    return decode_fn
+
+
+# ----------------------------------------------------------------------------
+# Sharding assembly + lowering
+# ----------------------------------------------------------------------------
+
+def _batch_shardings(cfg: ModelConfig, specs: dict, mesh: Mesh, rules):
+    def one(key, spec):
+        if key == "caches":
+            return tree_shardings_for(spec, caches_axes(cfg), mesh, rules)
+        ndim = len(spec.shape)
+        if ndim == 0:
+            return NamedSharding(mesh, P())
+        axes = ("batch",) + ("seq",) * (ndim - 1)
+        if key in ("image_embeds", "frames"):
+            axes = ("batch", "seq", "act_embed")[:ndim]
+        return NamedSharding(mesh, spec_for_shape(spec.shape, axes, mesh,
+                                                  rules))
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, rules=None):
+    rules = rules or rules_for(cfg)
+    abs_p = abstract_params(cfg)
+    p_axes = params_axes(cfg)
+    p_shard = tree_shardings_for(abs_p, p_axes, mesh, rules)
+    _, opt = make_train_step(cfg)
+    abs_opt = jax.eval_shape(opt.init, abs_p)
+    o_axes = opt_state_axes(cfg, abs_p, p_axes)
+    o_shard = tree_shardings_for(abs_opt, o_axes, mesh, rules)
+    return TrainState(params=p_shard, opt=o_shard,
+                      step=NamedSharding(mesh, P()))
+
+
+@dataclasses.dataclass
+class LoweredStep:
+    kind: str
+    fn: Callable
+    abstract_inputs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    jitted: Any
+
+    def lower(self):
+        return self.jitted.lower(*self.abstract_inputs)
+
+
+def _with_act_sharding(fn, mesh, rules):
+    from repro.sharding.ctx import activation_sharding
+
+    def wrapped(*args):
+        with activation_sharding(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+
+def build(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+          rules=None, constrain_acts: bool = True) -> LoweredStep:
+    """Assemble the jitted step for (arch x input-shape) on `mesh`.
+
+    constrain_acts installs the activation-sharding context during
+    tracing (repro.sharding.ctx): today that is ONLY the chunked
+    attention's query-sequence (context-parallel) constraint — §Perf E3,
+    153x memory for arctic prefill. (The MoE dispatch constraints were
+    tried and removed — §Perf E2.) Pass False to measure GSPMD-auto."""
+    rules = rules or rules_for(cfg)
+    specs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(cfg, specs, mesh, rules)
+    abs_p = abstract_params(cfg)
+    p_axes = params_axes(cfg)
+    p_shard = tree_shardings_for(abs_p, p_axes, mesh, rules)
+
+    if shape.kind == "train":
+        train_step, opt = make_train_step(cfg)
+        if constrain_acts:
+            train_step = _with_act_sharding(train_step, mesh, rules)
+        abs_opt = jax.eval_shape(opt.init, abs_p)
+        o_shard = tree_shardings_for(
+            abs_opt, opt_state_axes(cfg, abs_p, p_axes), mesh, rules)
+        st_shard = TrainState(params=p_shard, opt=o_shard,
+                              step=NamedSharding(mesh, P()))
+        abs_state = TrainState(params=abs_p, opt=abs_opt,
+                               step=jax.ShapeDtypeStruct((), jnp.int32))
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())}
+        jitted = jax.jit(train_step,
+                         in_shardings=(st_shard, batch_sh),
+                         out_shardings=(st_shard, metrics_sh),
+                         donate_argnums=(0,))
+        return LoweredStep("train", train_step, (abs_state, specs),
+                           (st_shard, batch_sh), (st_shard, metrics_sh),
+                           jitted)
+
+    if shape.kind == "prefill":
+        prefill = make_prefill_step(cfg)
+        if constrain_acts:
+            prefill = _with_act_sharding(prefill, mesh, rules)
+        out_sh = NamedSharding(mesh, spec_for_shape(
+            (shape.global_batch, cfg.vocab_size), ("batch", "vocab"),
+            mesh, rules))
+        jitted = jax.jit(prefill, in_shardings=(p_shard, batch_sh),
+                         out_shardings=out_sh)
+        return LoweredStep("prefill", prefill, (abs_p, specs),
+                           (p_shard, batch_sh), out_sh, jitted)
+
+    # decode
+    decode = make_decode_step(cfg)
+    if constrain_acts:
+        decode = _with_act_sharding(decode, mesh, rules)
+    logits_sh = NamedSharding(mesh, spec_for_shape(
+        (shape.global_batch, cfg.vocab_size), ("batch", "vocab"), mesh,
+        rules))
+    cache_sh = batch_sh["caches"]
+    jitted = jax.jit(decode, in_shardings=(p_shard, batch_sh),
+                     out_shardings=(logits_sh, cache_sh),
+                     donate_argnums=(1,))
+    return LoweredStep("decode", decode, (abs_p, specs),
+                       (p_shard, batch_sh), (logits_sh, cache_sh), jitted)

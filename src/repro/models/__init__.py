@@ -1,0 +1,12 @@
+"""Model substrate for the assigned architectures (pure functional JAX).
+
+Parameters are nested dicts of arrays; a parallel tree of logical-axis
+tuples drives sharding (repro.sharding). Layer stacks run under lax.scan
+with optional remat. Families: dense / MoE / hybrid(Mamba2) / SSM(xLSTM) /
+enc-dec(whisper) / VLM(pixtral).
+"""
+
+from repro.models.transformer import (DecoderLM, init_decoder_lm,
+                                      decoder_lm_axes)
+
+__all__ = ["DecoderLM", "init_decoder_lm", "decoder_lm_axes"]

@@ -1,0 +1,216 @@
+"""Grouped-query attention with RoPE, KV cache, window, softcap, cross-attn.
+
+Covers every assigned arch's attention flavor:
+  * GQA with arbitrary (n_heads, n_kv) — all archs;
+  * optional QKV bias (qwen2);
+  * attention-logit softcapping (gemma2);
+  * sliding-window masking, per-layer (gemma2 local/global alternation) —
+    the window may be a *traced* scalar so alternating layers can live in
+    one lax.scan;
+  * cross-attention over encoder memory (whisper decoder);
+  * KV cache for decode (one-token step) and prefill.
+
+The default compute path is XLA einsums (fused well by Mosaic/XLA and
+differentiable); `impl="pallas"` routes the self-attention forward through
+the flash-attention Pallas kernel (inference paths / benchmarks).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, softcap as apply_softcap, \
+    trunc_normal
+
+NEG_INF = -2.3819763e38
+
+
+class KVCache(NamedTuple):
+    k: jax.Array         # [B, S_max, H_kv, head_dim]
+    v: jax.Array         # [B, S_max, H_kv, head_dim]
+    index: jax.Array     # scalar int32: number of filled positions
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        index=jnp.zeros((), jnp.int32))
+
+
+def kv_cache_axes() -> KVCache:
+    return KVCache(k=("batch", "cache_seq", "kv_heads", "head_dim"),
+                   v=("batch", "cache_seq", "kv_heads", "head_dim"),
+                   index=())
+
+
+def init_attention(key: jax.Array, d: int, n_heads: int, n_kv: int,
+                   head_dim: int, dtype, qkv_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(kq, (d, n_heads, head_dim), dtype, fan_in=d),
+        "wk": trunc_normal(kk, (d, n_kv, head_dim), dtype, fan_in=d),
+        "wv": trunc_normal(kv, (d, n_kv, head_dim), dtype, fan_in=d),
+        "wo": trunc_normal(ko, (n_heads, head_dim, d), dtype,
+                           fan_in=n_heads * head_dim),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv, head_dim), dtype)
+    return p
+
+
+def attention_axes(qkv_bias: bool = False) -> dict:
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qkv_bias:
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    return a
+
+
+def _project(p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _grouped_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: jax.Array, cap: Optional[float],
+                    scale: float) -> jax.Array:
+    """q [B,S,H,D]; k,v [B,T,N,D] with H = N*G; mask [B, S, T] bool."""
+    b, s, h, d = q.shape
+    n = k.shape[2]
+    g = h // n
+    q5 = q.reshape(b, s, n, g, d)
+    scores = jnp.einsum("bsngd,btnd->bngst", q5.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = apply_softcap(scores, cap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def apply_attention(p: dict, x: jax.Array, positions: jax.Array, *,
+                    causal: bool = True, window=None,
+                    cap: Optional[float] = None,
+                    rope_theta: Optional[float] = 10000.0,
+                    query_scale: Optional[float] = None,
+                    cache: Optional[KVCache] = None,
+                    chunk_q: int = 0,
+                    ) -> tuple[jax.Array, Optional[KVCache]]:
+    """Self-attention. x [B,S,d]; positions [B,S] int32 absolute positions.
+
+    Without a cache: full-sequence attention (train / lowering prefill).
+    With a cache: writes this segment's K/V at cache.index and attends over
+    the filled prefix — S=1 is the decode step, S>1 is chunked prefill.
+    `window` may be None, a python int, or a traced int32 scalar.
+
+    chunk_q > 0 processes queries in chunks (python loop): the [S, S]
+    score matrix never materializes — [chunk, S] blocks instead, each
+    constrained query-sequence-sharded over "model" (context parallelism;
+    the §Perf lever for the 32k prefill shapes, where full scores at
+    56 unshardable heads are the memory wall).
+    """
+    from repro.sharding.ctx import constrain
+    q, k, v = _project(p, x)
+    head_dim = q.shape[-1]
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    if cache is None:
+        s_len = q.shape[1]
+
+        def block(qb, pos_b):
+            rows = pos_b[:, :, None]                       # [B, c, 1]
+            cols = positions[:, None, :]                   # [B, 1, S]
+            mask = jnp.ones(rows.shape[:2] + cols.shape[-1:], bool)
+            if causal:
+                mask &= rows >= cols
+            if window is not None:
+                mask &= (rows - cols) < window
+            return _grouped_attend(qb, k, v, mask, cap, scale)
+
+        if chunk_q and s_len > chunk_q and s_len % chunk_q == 0:
+            outs = []
+            for i in range(0, s_len, chunk_q):
+                qb = constrain(q[:, i:i + chunk_q],
+                               ("batch", "qseq", "heads", "head_dim"))
+                ob = block(qb, positions[:, i:i + chunk_q])
+                outs.append(constrain(
+                    ob, ("batch", "qseq", "heads", "head_dim")))
+            out = jnp.concatenate(outs, axis=1)
+        else:
+            out = block(q, positions)
+        new_cache = None
+    else:
+        b, s = x.shape[:2]
+        s_max = cache.k.shape[1]
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.index, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.index, axis=1)
+        new_index = cache.index + s
+        rows = positions[:, :, None]                       # [B, S, 1]
+        cols = jnp.arange(s_max)[None, None, :]            # [1, 1, S_max]
+        mask = cols < new_index
+        if causal:
+            mask &= rows >= cols
+        if window is not None:
+            mask &= (rows - cols) < window
+        out = _grouped_attend(q, new_k, new_v, mask, cap, scale)
+        new_cache = KVCache(k=new_k, v=new_v, index=new_index)
+
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# ----------------------------------------------------------------------------
+# Cross-attention (whisper decoder over encoder memory)
+# ----------------------------------------------------------------------------
+
+class CrossCache(NamedTuple):
+    k: jax.Array   # [B, T_mem, H_kv, head_dim] precomputed from memory
+    v: jax.Array
+
+
+def precompute_cross_cache(p: dict, memory: jax.Array) -> CrossCache:
+    k = jnp.einsum("btd,dhk->bthk", memory, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", memory, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return CrossCache(k=k, v=v)
+
+
+def apply_cross_attention(p: dict, x: jax.Array,
+                          memory: Optional[jax.Array] = None,
+                          cross_cache: Optional[CrossCache] = None,
+                          mem_mask: Optional[jax.Array] = None) -> jax.Array:
+    """x [B,S,d] queries; memory [B,T,d] (or a precomputed CrossCache)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if cross_cache is None:
+        cross_cache = precompute_cross_cache(p, memory)
+    k, v = cross_cache.k, cross_cache.v
+    b, s = q.shape[:2]
+    t = k.shape[1]
+    mask = jnp.ones((b, s, t), bool) if mem_mask is None \
+        else jnp.broadcast_to(mem_mask[:, None, :], (b, s, t))
+    out = _grouped_attend(q, k, v, mask, None, q.shape[-1] ** -0.5)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

@@ -1,0 +1,212 @@
+"""Whisper-style encoder-decoder backbone.
+
+The mel-spectrogram + conv feature extractor is the assignment's allowed
+STUB: the encoder consumes precomputed frame embeddings [B, T_src, d_model]
+(repro.models.frontends). Encoder: bidirectional self-attention, LayerNorm,
+learned positions (added by the frontend stub). Decoder: causal self-attn +
+cross-attn over encoder memory + MLP; decode carries a KV cache for self-
+attention and a precomputed cross-attention cache (encoder K/V are fixed
+once per utterance — computing them every step would be pure waste).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models.transformer import (ForwardOutput, _apply_mlp, _apply_norm,
+                                      _init_mlp, _mlp_axes, _norm_axes,
+                                      _norm_init, _maybe_remat,
+                                      _scan_or_unroll, _stack,
+                                      _stacked_axes)
+
+
+def _init_enc_layer(cfg: ModelConfig, key, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _norm_init(cfg, dtype),
+        "attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv, cfg.hd, dtype,
+                                        qkv_bias=True),
+        "ln2": _norm_init(cfg, dtype),
+        "mlp": _init_mlp(cfg, k2, dtype),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _norm_init(cfg, dtype),
+        "self_attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                             cfg.n_kv, cfg.hd, dtype,
+                                             qkv_bias=True),
+        "lnx": _norm_init(cfg, dtype),
+        "cross_attn": attn_mod.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                              cfg.n_kv, cfg.hd, dtype,
+                                              qkv_bias=True),
+        "ln2": _norm_init(cfg, dtype),
+        "mlp": _init_mlp(cfg, k3, dtype),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = cfg.jnp_dtype
+    k_emb, k_enc, k_dec, k_pos = jax.random.split(key, 4)
+    return {
+        "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": L.trunc_normal(k_pos, (cfg.max_source_len * 4,
+                                            cfg.d_model), dtype,
+                                    fan_in=cfg.d_model),
+        "encoder": _stack(k_enc, cfg.n_encoder_layers,
+                          lambda k: _init_enc_layer(cfg, k, dtype)),
+        "enc_norm": _norm_init(cfg, dtype),
+        "decoder": _stack(k_dec, cfg.n_layers,
+                          lambda k: _init_dec_layer(cfg, k, dtype)),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+
+
+def encdec_axes(cfg: ModelConfig) -> dict:
+    enc = {"ln1": _norm_axes(cfg),
+           "attn": attn_mod.attention_axes(qkv_bias=True),
+           "ln2": _norm_axes(cfg), "mlp": _mlp_axes(cfg)}
+    dec = {"ln1": _norm_axes(cfg),
+           "self_attn": attn_mod.attention_axes(qkv_bias=True),
+           "lnx": _norm_axes(cfg),
+           "cross_attn": attn_mod.attention_axes(qkv_bias=True),
+           "ln2": _norm_axes(cfg), "mlp": _mlp_axes(cfg)}
+    return {
+        "embed": L.embedding_axes(),
+        "pos_embed": ("seq", "embed"),
+        "encoder": _stacked_axes(cfg.n_encoder_layers, enc),
+        "enc_norm": _norm_axes(cfg),
+        "decoder": _stacked_axes(cfg.n_layers, dec),
+        "final_norm": _norm_axes(cfg),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames [B, T_src, d_model] (stub frontend output) -> memory."""
+    b, t, _ = frames.shape
+    x = frames
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(x, p):
+        h = _apply_norm(cfg, p["ln1"], x)
+        h, _ = attn_mod.apply_attention(p["attn"], h, positions,
+                                        causal=False, rope_theta=None)
+        x = x + h
+        h = _apply_norm(cfg, p["ln2"], x)
+        return x + _apply_mlp(cfg, p["mlp"], h), None
+
+    x, _ = _scan_or_unroll(cfg, body, x, params["encoder"],
+                           cfg.n_encoder_layers)
+    return _apply_norm(cfg, params["enc_norm"], x)
+
+
+def _embed_dec(cfg: ModelConfig, params: dict, tokens: jax.Array,
+               start: jax.Array | int = 0) -> jax.Array:
+    x = L.apply_embedding(params["embed"], tokens, scale_by_sqrt_d=False)
+    pos = start + jnp.arange(tokens.shape[1])
+    return x + jnp.take(params["pos_embed"],
+                        pos % params["pos_embed"].shape[0], axis=0)[None]
+
+
+def forward_encdec(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                   frames: jax.Array) -> ForwardOutput:
+    """Teacher-forced training pass. tokens [B, S], frames [B, T, d]."""
+    memory = encode(cfg, params, frames)
+    x = _embed_dec(cfg, params, tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, p):
+        h = _apply_norm(cfg, p["ln1"], x)
+        h, _ = attn_mod.apply_attention(p["self_attn"], h, positions,
+                                        causal=True, rope_theta=None)
+        x = x + h
+        h = _apply_norm(cfg, p["lnx"], x)
+        x = x + attn_mod.apply_cross_attention(p["cross_attn"], h,
+                                               memory=memory)
+        h = _apply_norm(cfg, p["ln2"], x)
+        return x + _apply_mlp(cfg, p["mlp"], h), None
+
+    x, _ = _scan_or_unroll(cfg, body, x, params["decoder"], cfg.n_layers)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(params["embed"], x)
+    return ForwardOutput(logits=logits, caches=None,
+                         aux_loss=jnp.zeros((), jnp.float32))
+
+
+# ----------------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------------
+
+class EncDecCaches(NamedTuple):
+    self_kv: Any        # stacked KVCache [L_dec, ...]
+    cross: Any          # stacked CrossCache [L_dec, ...] (fixed)
+
+
+def init_encdec_caches(cfg: ModelConfig, params: dict, frames: jax.Array,
+                       batch: int, max_len: int) -> EncDecCaches:
+    """Run the encoder once and precompute every layer's cross K/V."""
+    memory = encode(cfg, params, frames)
+    dtype = cfg.jnp_dtype
+    self_kv = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[attn_mod.init_kv_cache(batch, max_len, cfg.n_kv, cfg.hd, dtype)
+          for _ in range(cfg.n_layers)])
+
+    def one_cross(p):
+        return attn_mod.precompute_cross_cache(p["cross_attn"], memory)
+
+    cross = jax.vmap(one_cross)(params["decoder"])
+    return EncDecCaches(self_kv=self_kv, cross=cross)
+
+
+def decode_step_encdec(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                       caches: EncDecCaches,
+                       index: jax.Array) -> ForwardOutput:
+    """One-token decode. tokens [B, 1]."""
+    x = _embed_dec(cfg, params, tokens, start=index)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (b, 1))
+
+    def body(x, inp):
+        p, kv, cross = inp
+        kv = kv._replace(index=index)
+        h = _apply_norm(cfg, p["ln1"], x)
+        h, new_kv = attn_mod.apply_attention(p["self_attn"], h, positions,
+                                             causal=True, rope_theta=None,
+                                             cache=kv)
+        x = x + h
+        h = _apply_norm(cfg, p["lnx"], x)
+        x = x + attn_mod.apply_cross_attention(p["cross_attn"], h,
+                                               cross_cache=cross)
+        h = _apply_norm(cfg, p["ln2"], x)
+        return x + _apply_mlp(cfg, p["mlp"], h), new_kv
+
+    x, new_kv = _scan_or_unroll(cfg, body, x,
+                                (params["decoder"], caches.self_kv,
+                                 caches.cross), cfg.n_layers)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(params["embed"], x)
+    return ForwardOutput(logits=logits,
+                         caches=EncDecCaches(self_kv=new_kv,
+                                             cross=caches.cross),
+                         aux_loss=jnp.zeros((), jnp.float32))
+
+
+def encdec_loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    out = forward_encdec(cfg, params, batch["tokens"], batch["frames"])
+    logits = out.logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["targets"][..., None],
+                             axis=-1)[..., 0]
+    maskf = batch["mask"].astype(jnp.float32)
+    return -(ll * maskf).sum() / jnp.maximum(maskf.sum(), 1.0)

@@ -1,0 +1,51 @@
+"""Modality frontend STUBS (the assignment's single allowed carve-out).
+
+`whisper-small` [audio] and `pixtral-12b` [vlm] specify the transformer
+backbone only; the mel-spectrogram + conv codec and the ViT are stubbed as
+providers of precomputed embeddings with the right shapes:
+
+  audio:  frame embeddings  [B, T_frames, d_model]   (encoder input)
+  vision: patch embeddings  [B, N_patch,  d_model]   (prepended to text)
+
+For smoke tests / examples the stubs generate deterministic pseudo-
+embeddings; for the dry-run they are ShapeDtypeStructs (input_specs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frames_stub(cfg: ModelConfig, key: jax.Array, batch: int,
+                      n_frames: int | None = None) -> jax.Array:
+    """Stand-in for mel-spectrogram -> conv1d x2 -> frame embeddings."""
+    t = n_frames or cfg.max_source_len
+    x = jax.random.normal(key, (batch, t, cfg.d_model), cfg.jnp_dtype)
+    # sinusoidal positions, as whisper's encoder adds them post-conv
+    pos = jnp.arange(t)[:, None]
+    dim = jnp.arange(cfg.d_model)[None, :]
+    angle = pos / jnp.power(10000.0, (2 * (dim // 2)) / cfg.d_model)
+    pe = jnp.where(dim % 2 == 0, jnp.sin(angle), jnp.cos(angle))
+    return x + pe[None].astype(x.dtype)
+
+
+def image_patches_stub(cfg: ModelConfig, key: jax.Array, batch: int,
+                       n_patches: int | None = None) -> jax.Array:
+    """Stand-in for ViT encoder + multimodal projector output."""
+    n = n_patches or cfg.n_image_tokens
+    return jax.random.normal(key, (batch, n, cfg.d_model), cfg.jnp_dtype)
+
+
+def audio_frames_spec(cfg: ModelConfig, batch: int,
+                      n_frames: int | None = None) -> jax.ShapeDtypeStruct:
+    t = n_frames or cfg.max_source_len
+    return jax.ShapeDtypeStruct((batch, t, cfg.d_model), cfg.jnp_dtype)
+
+
+def image_patches_spec(cfg: ModelConfig, batch: int,
+                       n_patches: int | None = None) -> jax.ShapeDtypeStruct:
+    n = n_patches or cfg.n_image_tokens
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), cfg.jnp_dtype)

@@ -1,0 +1,135 @@
+"""Shared layers: norms, RoPE, gated MLP, embeddings, initializers.
+
+Convention: every `init_<x>` has a matching `<x>_axes` returning the same
+pytree structure with logical-axis tuples as leaves (repro.sharding maps
+them to mesh axes). Apply functions are pure; compute in f32 for norms and
+softmax regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def trunc_normal(key: jax.Array, shape, dtype, fan_in: Optional[int] = None,
+                 scale: float = 1.0) -> jax.Array:
+    """Truncated-normal init with 1/sqrt(fan_in) scaling (lecun-style)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = scale / max(float(fan), 1.0) ** 0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}     # gemma-style (1 + scale)
+
+
+def rmsnorm_axes() -> dict:
+    return {"scale": ("embed",)}
+
+
+def apply_rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_axes() -> dict:
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def apply_layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embedding
+# ----------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x [B, S, H, D] (D even), positions [B, S] int32."""
+    d_half = x.shape[-1] // 2
+    freq = theta ** (-jnp.arange(d_half, dtype=jnp.float32) / d_half)
+    ang = positions[..., None].astype(jnp.float32) * freq     # [B, S, D/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Gated MLP (SwiGLU/GeGLU)
+# ----------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": trunc_normal(k1, (d, d_ff), dtype, fan_in=d),
+        "w_up": trunc_normal(k2, (d, d_ff), dtype, fan_in=d),
+        "w_down": trunc_normal(k3, (d_ff, d), dtype, fan_in=d_ff),
+    }
+
+
+def mlp_axes() -> dict:
+    return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed")}
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    fn = jax.nn.silu if act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    return jnp.einsum("bsf,fd->bsd", fn(gate) * up, p["w_down"])
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------------
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype) -> dict:
+    # std 1/sqrt(d): forward embeds are rescaled by sqrt(d) (unit variance)
+    # while tied-head logits x @ table^T stay O(1).
+    return {"table": trunc_normal(key, (vocab, d), dtype, fan_in=d)}
+
+
+def embedding_axes() -> dict:
+    return {"table": ("vocab", "embed")}
+
+
+def apply_embedding(p: dict, tokens: jax.Array,
+                    scale_by_sqrt_d: bool = True) -> jax.Array:
+    emb = jnp.take(p["table"], tokens, axis=0)
+    if scale_by_sqrt_d:
+        emb = emb * float(p["table"].shape[1]) ** 0.5
+    return emb
+
+
+def apply_unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table^T."""
+    return jnp.einsum("bsd,vd->bsv", x, p["table"])
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,241 @@
+"""Mamba2 (SSD) block: chunked scan for train/prefill, recurrence for decode.
+
+State-space duality form (Dao & Gu 2024): per head h with state size n,
+
+    s_t = exp(dt_t A) s_{t-1} + dt_t x_t B_t^T,     y_t = C_t s_t + D x_t
+
+Training/prefill computes this with the *chunked* algorithm: the sequence is
+split into chunks of length c; within a chunk the quadratic masked-decay
+form runs on the MXU, and a short lax.scan carries the [h, p, n] state
+across chunks — O(L c) work, O(L/c) sequential depth. Decode is the O(1)
+single-step recurrence on a carried (conv, ssm) cache, which is what makes
+`long_500k` tractable for the hybrid archs (state is constant-size in L).
+
+Layout follows mamba2 reference: in_proj -> (z, x, B, C, dt); depthwise
+causal conv over (x, B, C); n_groups = 1 (B, C shared across heads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Dims:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # [B, conv_kernel-1, conv_dim] trailing inputs
+    ssm: jax.Array    # [B, n_heads, head_dim, d_state]
+
+
+def init_mamba_cache(dims: Mamba2Dims, batch: int, dtype) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, dims.conv_kernel - 1, dims.conv_dim), dtype),
+        ssm=jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.d_state),
+                      jnp.float32))
+
+
+def mamba_cache_axes() -> MambaCache:
+    return MambaCache(conv=("batch", "seq", "mlp"),
+                      ssm=("batch", "heads", "head_dim", "state"))
+
+
+def init_mamba2(key: jax.Array, dims: Mamba2Dims, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    h = dims.n_heads
+    # dt bias ~ softplus^-1 of dt in [1e-3, 1e-1] (mamba init)
+    dt = jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32)
+                 * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": trunc_normal(ks[0], (dims.d_model, dims.d_in_proj), dtype,
+                                fan_in=dims.d_model),
+        "conv_w": trunc_normal(ks[1], (dims.conv_kernel, dims.conv_dim),
+                               dtype, fan_in=dims.conv_kernel),
+        "conv_b": jnp.zeros((dims.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.zeros((dims.d_inner,), dtype),
+        "out_proj": trunc_normal(ks[2], (dims.d_inner, dims.d_model), dtype,
+                                 fan_in=dims.d_inner),
+    }
+
+
+def mamba2_axes() -> dict:
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "norm_scale": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def _split_proj(dims: Mamba2Dims, zxbcdt: jax.Array):
+    di, n, h = dims.d_inner, dims.d_state, dims.n_heads
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + dims.conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(y.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """[..., c] -> [..., c, c]: S[i,j] = sum_{j<k<=i} x_k, -inf for j>i."""
+    c = x.shape[-1]
+    cum = jnp.cumsum(x, -1)
+    s = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+                 c_in: jax.Array, chunk: int,
+                 init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x [B,L,H,P]; dt [B,L,H] (post-softplus); a [H] (negative);
+    b_in, c_in [B,L,N] (n_groups=1). Returns (y [B,L,H,P],
+    final_state [B,H,P,N]).
+    """
+    bsz, l, h, p = x.shape
+    n = b_in.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xd = x * dt[..., None]                                   # dt-weighted x
+    da = dt * a[None, None, :]                               # [B,L,H] log-decay
+
+    # reshape to chunks
+    xd = xd.reshape(bsz, nc, chunk, h, p)
+    da = da.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # [B,H,nc,c]
+    bm = b_in.reshape(bsz, nc, chunk, n)
+    cm = c_in.reshape(bsz, nc, chunk, n)
+
+    da_cum = jnp.cumsum(da, axis=-1)                          # [B,H,nc,c]
+    lmat = jnp.exp(_segsum(da))                               # [B,H,nc,c,c]
+
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cm, bm, lmat, xd)
+
+    # per-chunk end states
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)         # [B,H,nc,c]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bm, decay_states, xd)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])                    # [B,H,nc]
+    s0 = (jnp.zeros((bsz, h, p, n), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+
+    def carry_fn(s, inp):
+        st, dec = inp                                         # [B,H,P,N],[B,H]
+        prev = s
+        s = s * dec[..., None, None] + st
+        return s, prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                # [nc,B,H,P,N]
+    decay_t = chunk_decay.transpose(2, 0, 1)                  # [nc,B,H]
+    final, prev_states = jax.lax.scan(carry_fn, s0, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # [B,nc,H,P,N]
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(da_cum)                             # [B,H,nc,c]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cm, prev_states,
+                       state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final
+
+
+def apply_mamba2(p: dict, dims: Mamba2Dims, x: jax.Array,
+                 cache: Optional[MambaCache] = None
+                 ) -> tuple[jax.Array, Optional[MambaCache]]:
+    """x [B, L, d_model] -> (y, new_cache). cache => single-step decode."""
+    bsz, l, _ = x.shape
+    h, pd, n = dims.n_heads, dims.head_dim, dims.d_state
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(dims, zxbcdt)
+
+    if cache is None:
+        # causal depthwise conv over the sequence
+        pad = jnp.pad(xbc, ((0, 0), (dims.conv_kernel - 1, 0), (0, 0)))
+        windows = jnp.stack(
+            [pad[:, i:i + l] for i in range(dims.conv_kernel)], axis=-1)
+        xbc = jnp.einsum("blck,kc->blc", windows, p["conv_w"]) + p["conv_b"]
+        xbc = jax.nn.silu(xbc)
+        new_conv = None
+    else:
+        # decode: l == 1; window = [conv_state, xbc]
+        window = jnp.concatenate([cache.conv.astype(xbc.dtype), xbc], axis=1)
+        xbc = (jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+               + p["conv_b"])[:, None, :]
+        xbc = jax.nn.silu(xbc)
+        new_conv = window[:, 1:].astype(cache.conv.dtype)
+
+    xs, b_in, c_in = jnp.split(xbc, [dims.d_inner, dims.d_inner + n], -1)
+    xs = xs.reshape(bsz, l, h, pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])       # [B,L,H]
+    a = -jnp.exp(p["A_log"])                                  # [H] negative
+
+    if cache is None:
+        y, final = _ssd_chunked(xs.astype(jnp.float32), dt, a,
+                                b_in.astype(jnp.float32),
+                                c_in.astype(jnp.float32),
+                                min(dims.chunk, l))
+        new_cache = None
+    else:
+        da = jnp.exp(dt[:, 0] * a[None, :])                   # [B,H]
+        dbx = jnp.einsum("bhp,bn,bh->bhpn", xs[:, 0].astype(jnp.float32),
+                         b_in[:, 0].astype(jnp.float32), dt[:, 0])
+        s = cache.ssm * da[..., None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32),
+                       s)[:, None]                            # [B,1,H,P]
+        new_cache = MambaCache(conv=new_conv, ssm=s)
+        final = s
+
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, l, dims.d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"]), new_cache

@@ -1,0 +1,608 @@
+"""Decoder LM assembly for all decoder-only families (dense/moe/hybrid/ssm/vlm).
+
+One functional model: `init_decoder_lm` builds the param pytree (layer
+stacks pre-stacked on a leading axis for lax.scan), `decoder_lm_axes` the
+matching logical-axis tree, `forward` the full-sequence pass (train /
+prefill) and `decode_step` the one-token cached pass. Family dispatch:
+
+  dense / vlm   [norm attn (post) norm mlp (post)] x L, scanned
+  moe           first_dense unscanned dense layers + scanned MoE layers
+  hybrid        Mamba2 backbone; one SHARED attn+mlp block applied every
+                `attn_every` layers (zamba2) — stages: scan(mamba)+shared
+  ssm           alternating mLSTM / sLSTM blocks (xlstm), kind-switched
+                inside one scan
+
+Heterogeneous per-layer behaviour (gemma2 local/global windows) rides
+through the scan as a traced per-layer int array, so one compiled body
+serves every layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+
+GLOBAL_WINDOW = 1 << 30   # sentinel: "global" attention layer
+
+
+class ForwardOutput(NamedTuple):
+    logits: jax.Array
+    caches: Any
+    aux_loss: jax.Array
+
+
+# ============================================================================
+# Param init / axes
+# ============================================================================
+
+def _norm_init(cfg: ModelConfig, dtype):
+    return (L.init_rmsnorm(cfg.d_model, dtype) if cfg.norm == "rmsnorm"
+            else L.init_layernorm(cfg.d_model, dtype))
+
+
+def _norm_axes(cfg: ModelConfig):
+    return (L.rmsnorm_axes() if cfg.norm == "rmsnorm"
+            else L.layernorm_axes())
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    return (L.apply_rmsnorm(p, x) if cfg.norm == "rmsnorm"
+            else L.apply_layernorm(p, x))
+
+
+def _init_mlp(cfg: ModelConfig, key, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    p = L.init_mlp(key, cfg.d_model, d_ff, dtype)
+    if not cfg.mlp_gated:
+        p.pop("w_gate")
+    return p
+
+
+def _mlp_axes(cfg: ModelConfig):
+    a = L.mlp_axes()
+    if not cfg.mlp_gated:
+        a.pop("w_gate")
+    return a
+
+
+def _apply_mlp(cfg: ModelConfig, p, x):
+    if cfg.mlp_gated:
+        return L.apply_mlp(p, x, cfg.act)
+    fn = jax.nn.silu if cfg.act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    h = fn(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def _init_dense_layer(cfg: ModelConfig, key, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": _norm_init(cfg, dtype),
+        "attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv, cfg.hd, dtype,
+                                        cfg.qkv_bias),
+        "ln2": _norm_init(cfg, dtype),
+        "mlp": _init_mlp(cfg, k2, dtype),
+    }
+    if cfg.post_norms:
+        p["ln1_post"] = _norm_init(cfg, dtype)
+        p["ln2_post"] = _norm_init(cfg, dtype)
+    return p
+
+
+def _dense_layer_axes(cfg: ModelConfig) -> dict:
+    a = {
+        "ln1": _norm_axes(cfg),
+        "attn": attn_mod.attention_axes(cfg.qkv_bias),
+        "ln2": _norm_axes(cfg),
+        "mlp": _mlp_axes(cfg),
+    }
+    if cfg.post_norms:
+        a["ln1_post"] = _norm_axes(cfg)
+        a["ln2_post"] = _norm_axes(cfg)
+    return a
+
+
+def _init_moe_layer(cfg: ModelConfig, key, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _norm_init(cfg, dtype),
+        "attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv, cfg.hd, dtype,
+                                        cfg.qkv_bias),
+        "ln2": _norm_init(cfg, dtype),
+        "moe": moe_mod.init_moe(k2, cfg.d_model, cfg.n_experts,
+                                cfg.moe_d_ff, cfg.top_k, dtype,
+                                cfg.shared_expert_d_ff,
+                                cfg.dense_residual_d_ff),
+    }
+
+
+def _moe_layer_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": _norm_axes(cfg),
+        "attn": attn_mod.attention_axes(cfg.qkv_bias),
+        "ln2": _norm_axes(cfg),
+        "moe": moe_mod.moe_axes(bool(cfg.shared_expert_d_ff),
+                                bool(cfg.dense_residual_d_ff)),
+    }
+
+
+def _mamba_dims(cfg: ModelConfig) -> m2.Mamba2Dims:
+    return m2.Mamba2Dims(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                         head_dim=cfg.ssm_head_dim,
+                         conv_kernel=cfg.conv_kernel, chunk=cfg.ssd_chunk)
+
+
+def _xlstm_dims(cfg: ModelConfig) -> xl.XLSTMDims:
+    return xl.XLSTMDims(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        conv_kernel=cfg.conv_kernel,
+                        chunk=cfg.xlstm_chunk)
+
+
+def _stack(key, n: int, init_one):
+    """Stack per-layer params on a leading 'layers' axis."""
+    keys = jax.random.split(key, n)
+    ps = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def _stacked_axes(n: int, axes_one):
+    return jax.tree.map(lambda a: ("layers",) + a, axes_one,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_decoder_lm(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = cfg.jnp_dtype
+    k_emb, k_layers, k_extra = jax.random.split(key, 3)
+    params: dict = {
+        "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+
+    if cfg.family in ("dense", "vlm"):
+        params["layers"] = _stack(
+            k_layers, cfg.n_layers, lambda k: _init_dense_layer(cfg, k,
+                                                                dtype))
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        params["layers"] = _stack(
+            k_layers, n_moe, lambda k: _init_moe_layer(cfg, k, dtype))
+        if cfg.first_dense_layers:
+            params["dense_layers"] = _stack(
+                k_extra, cfg.first_dense_layers,
+                lambda k: _init_dense_layer(cfg, k, dtype))
+    elif cfg.family == "hybrid":
+        dims = _mamba_dims(cfg)
+        params["layers"] = _stack(
+            k_layers, cfg.n_layers,
+            lambda k: {"ln": _norm_init(cfg, dtype),
+                       "mamba": m2.init_mamba2(k, dims, dtype)})
+        params["shared_attn"] = _init_dense_layer(cfg, k_extra, dtype)
+    elif cfg.family == "ssm":
+        dims = _xlstm_dims(cfg)
+        k_m, k_s = jax.random.split(k_extra)
+
+        def init_one(k):
+            km, ks = jax.random.split(k)
+            return {"ln": _norm_init(cfg, dtype),
+                    "mlstm": xl.init_mlstm(km, dims, dtype),
+                    "slstm": xl.init_slstm(ks, dims, dtype)}
+
+        params["layers"] = _stack(k_layers, cfg.n_layers, init_one)
+        del k_m, k_s
+    else:
+        raise ValueError(f"init_decoder_lm: unsupported family {cfg.family}")
+    return params
+
+
+def decoder_lm_axes(cfg: ModelConfig) -> dict:
+    axes: dict = {
+        "embed": L.embedding_axes(),
+        "final_norm": _norm_axes(cfg),
+    }
+    if cfg.family in ("dense", "vlm"):
+        axes["layers"] = _stacked_axes(cfg.n_layers, _dense_layer_axes(cfg))
+    elif cfg.family == "moe":
+        axes["layers"] = _stacked_axes(cfg.n_layers - cfg.first_dense_layers,
+                                       _moe_layer_axes(cfg))
+        if cfg.first_dense_layers:
+            axes["dense_layers"] = _stacked_axes(cfg.first_dense_layers,
+                                                 _dense_layer_axes(cfg))
+    elif cfg.family == "hybrid":
+        axes["layers"] = _stacked_axes(
+            cfg.n_layers, {"ln": _norm_axes(cfg), "mamba": m2.mamba2_axes()})
+        axes["shared_attn"] = _dense_layer_axes(cfg)
+    elif cfg.family == "ssm":
+        axes["layers"] = _stacked_axes(
+            cfg.n_layers, {"ln": _norm_axes(cfg),
+                           "mlstm": xl.mlstm_axes(),
+                           "slstm": xl.slstm_axes()})
+    return axes
+
+
+# ============================================================================
+# Per-layer application
+# ============================================================================
+
+def _apply_dense_layer(cfg: ModelConfig, p: dict, x, positions, window,
+                       cache=None):
+    h = _apply_norm(cfg, p["ln1"], x)
+    h, new_cache = attn_mod.apply_attention(
+        p["attn"], h, positions, causal=True, window=window,
+        cap=cfg.attn_softcap,
+        rope_theta=None if cfg.pos_embed != "rope" else cfg.rope_theta,
+        query_scale=cfg.query_scale, cache=cache,
+        chunk_q=cfg.attn_chunk_q)
+    if cfg.post_norms:
+        h = _apply_norm(cfg, p["ln1_post"], h)
+    x = x + h
+    h = _apply_norm(cfg, p["ln2"], x)
+    h = _apply_mlp(cfg, p["mlp"], h)
+    if cfg.post_norms:
+        h = _apply_norm(cfg, p["ln2_post"], h)
+    return x + h, new_cache
+
+
+def _apply_moe_layer(cfg: ModelConfig, p: dict, x, positions, cache=None):
+    h = _apply_norm(cfg, p["ln1"], x)
+    h, new_cache = attn_mod.apply_attention(
+        p["attn"], h, positions, causal=True, window=None,
+        cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+        query_scale=cfg.query_scale, cache=cache,
+        chunk_q=cfg.attn_chunk_q)
+    x = x + h
+    h = _apply_norm(cfg, p["ln2"], x)
+    out = moe_mod.apply_moe(p["moe"], h, cfg.top_k, impl=cfg.moe_impl,
+                            capacity_factor=cfg.moe_capacity_factor)
+    return x + out.y, new_cache, out.aux_loss
+
+
+def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer window sizes: gemma2 alternates local / global."""
+    if cfg.local_global_pattern and cfg.window:
+        w = [cfg.window if i % 2 == 0 else GLOBAL_WINDOW
+             for i in range(cfg.n_layers)]
+    elif cfg.window:
+        w = [cfg.window] * cfg.n_layers
+    else:
+        w = [GLOBAL_WINDOW] * cfg.n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+# ============================================================================
+# Forward (train / prefill) and decode_step
+# ============================================================================
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _layer_slice(stacked, i: int):
+    """Per-layer params view from a stacked tree (unrolled path)."""
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def _scan_or_unroll(cfg: ModelConfig, body, x, xs, n: int):
+    """lax.scan over stacked layers, or a python loop when
+    cfg.scan_layers=False (used by the dry-run's roofline pass:
+    cost_analysis counts a While body ONCE, so honest FLOP/byte numbers
+    need the unrolled program; the scan build is what ships for compile
+    speed)."""
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(_maybe_remat(cfg, body), x, xs)
+        return x, ys
+    ys = []
+    fn = _maybe_remat(cfg, body)
+    for i in range(n):
+        x, y = fn(x, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        return x, jax.tree.map(lambda *v: jnp.stack(v), *ys)
+    return x, None
+
+
+def embed_inputs(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 image_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Token embeddings; VLM prepends (stub) image patch embeddings."""
+    x = L.apply_embedding(params["embed"], tokens)
+    if cfg.family == "vlm" and image_embeds is not None:
+        x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            image_embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None) -> ForwardOutput:
+    """Full-sequence forward (training / lowering prefill). tokens [B, S]."""
+    x = embed_inputs(cfg, params, tokens, image_embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm"):
+        windows = _layer_windows(cfg)
+
+        def body(carry, inp):
+            x = carry
+            p, w = inp
+            x, _ = _apply_dense_layer(cfg, p, x, positions, w)
+            return x, None
+
+        x, _ = _scan_or_unroll(cfg, body, x, (params["layers"], windows),
+                               cfg.n_layers)
+
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            def dbody(carry, p):
+                x = carry
+                x, _ = _apply_dense_layer(cfg, p, x, positions, None)
+                return x, None
+            x, _ = _scan_or_unroll(cfg, dbody, x, params["dense_layers"],
+                                   cfg.first_dense_layers)
+
+        def body(carry, p):
+            x = carry
+            x, _, aux_l = _apply_moe_layer(cfg, p, x, positions)
+            return x, aux_l
+
+        x, aux_per_layer = _scan_or_unroll(
+            cfg, body, x, params["layers"],
+            cfg.n_layers - cfg.first_dense_layers)
+        aux = aux_per_layer.mean()
+
+    elif cfg.family == "hybrid":
+        dims = _mamba_dims(cfg)
+        n_stage = cfg.n_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape(n_stage, cfg.attn_every, *a.shape[1:]),
+            params["layers"])
+
+        def mbody(carry, p):
+            x = carry
+            h, _ = m2.apply_mamba2(p["mamba"], dims,
+                                   _apply_norm(cfg, p["ln"], x))
+            return x + h, None
+
+        for stage in range(n_stage):
+            stage_params = jax.tree.map(lambda a: a[stage], stacked)
+            x, _ = _scan_or_unroll(cfg, mbody, x, stage_params,
+                                   cfg.attn_every)
+            x, _ = _apply_dense_layer(cfg, params["shared_attn"], x,
+                                      positions, None)
+
+    elif cfg.family == "ssm":
+        dims = _xlstm_dims(cfg)
+        kinds = jnp.asarray(
+            [1 if (cfg.slstm_every
+                   and i % cfg.slstm_every == cfg.slstm_every - 1) else 0
+             for i in range(cfg.n_layers)], jnp.int32)
+
+        def body(carry, inp):
+            x = carry
+            p, kind = inp
+            h = _apply_norm(cfg, p["ln"], x)
+            h_m, _ = xl.apply_mlstm(p["mlstm"], dims, h)
+            h_s, _ = xl.apply_slstm(p["slstm"], dims, h)
+            h = jnp.where(kind == 0, h_m, h_s).astype(x.dtype)
+            return x + h, None
+
+        x, _ = _scan_or_unroll(cfg, body, x, (params["layers"], kinds),
+                               cfg.n_layers)
+    else:
+        raise ValueError(f"forward: unsupported family {cfg.family}")
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(params["embed"], x)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return ForwardOutput(logits=logits, caches=None, aux_loss=aux)
+
+
+# ----------------------------------------------------------------------------
+# Decode (one token, carried caches)
+# ----------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-layer caches for decode."""
+    dtype = cfg.jnp_dtype
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def one(_):
+            return attn_mod.init_kv_cache(batch, max_len, cfg.n_kv, cfg.hd,
+                                          dtype)
+        n = cfg.n_layers
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[one(i) for i in range(n)])
+    if cfg.family == "hybrid":
+        dims = _mamba_dims(cfg)
+        n_stage = cfg.n_layers // cfg.attn_every
+        mamba = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[m2.init_mamba_cache(dims, batch, dtype)
+              for _ in range(cfg.n_layers)])
+        attn = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[attn_mod.init_kv_cache(batch, max_len, cfg.n_kv, cfg.hd, dtype)
+              for _ in range(n_stage)])
+        return {"mamba": mamba, "attn": attn}
+    if cfg.family == "ssm":
+        dims = _xlstm_dims(cfg)
+        ml = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[xl.init_mlstm_cache(dims, batch, dtype)
+                            for _ in range(cfg.n_layers)])
+        sl = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[xl.init_slstm_cache(dims, batch, dtype)
+                            for _ in range(cfg.n_layers)])
+        return {"mlstm": ml, "slstm": sl}
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                caches, index: jax.Array) -> ForwardOutput:
+    """One-token decode. tokens [B, 1]; index: scalar filled length."""
+    x = L.apply_embedding(params["embed"], tokens)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (b, 1))
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm"):
+        windows = _layer_windows(cfg)
+
+        def body(x, inp):
+            p, w, cache = inp
+            cache = cache._replace(index=index)
+            x, new_cache = _apply_dense_layer(cfg, p, x, positions, w,
+                                              cache=cache)
+            return x, new_cache
+
+        x, new_caches = _scan_or_unroll(
+            cfg, body, x, (params["layers"], windows, caches),
+            cfg.n_layers)
+
+    elif cfg.family == "moe":
+        def body(x, inp):
+            p, cache = inp
+            cache = cache._replace(index=index)
+            x, new_cache, _aux = _apply_moe_layer(cfg, p, x, positions,
+                                                  cache=cache)
+            return x, new_cache
+
+        # NOTE: first_dense_layers share the stacked cache's leading slots
+        if cfg.first_dense_layers:
+            n_d = cfg.first_dense_layers
+            dense_caches = jax.tree.map(lambda a: a[:n_d], caches)
+            moe_caches = jax.tree.map(lambda a: a[n_d:], caches)
+
+            def dbody(x, inp):
+                p, cache = inp
+                cache = cache._replace(index=index)
+                x, nc = _apply_dense_layer(cfg, p, x, positions, None,
+                                           cache=cache)
+                return x, nc
+
+            x, new_d = _scan_or_unroll(
+                cfg, dbody, x, (params["dense_layers"], dense_caches), n_d)
+            x, new_m = _scan_or_unroll(
+                cfg, body, x, (params["layers"], moe_caches),
+                cfg.n_layers - n_d)
+            new_caches = jax.tree.map(
+                lambda a, b2: jnp.concatenate([a, b2], 0), new_d, new_m)
+        else:
+            x, new_caches = _scan_or_unroll(
+                cfg, body, x, (params["layers"], caches), cfg.n_layers)
+
+    elif cfg.family == "hybrid":
+        dims = _mamba_dims(cfg)
+        n_stage = cfg.n_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape(n_stage, cfg.attn_every, *a.shape[1:]),
+            params["layers"])
+        mcaches = jax.tree.map(
+            lambda a: a.reshape(n_stage, cfg.attn_every, *a.shape[1:]),
+            caches["mamba"])
+
+        def mbody(x, inp):
+            p, cache = inp
+            h, new_cache = m2.apply_mamba2(p["mamba"], dims,
+                                           _apply_norm(cfg, p["ln"], x),
+                                           cache=cache)
+            return x + h, new_cache
+
+        new_m, new_a = [], []
+        for stage in range(n_stage):
+            sp = jax.tree.map(lambda a: a[stage], stacked)
+            sc = jax.tree.map(lambda a: a[stage], mcaches)
+            x, nm = _scan_or_unroll(cfg, mbody, x, (sp, sc),
+                                    cfg.attn_every)
+            ac = jax.tree.map(lambda a: a[stage], caches["attn"])
+            ac = ac._replace(index=index)
+            x, na = _apply_dense_layer(cfg, params["shared_attn"], x,
+                                       positions, None, cache=ac)
+            new_m.append(nm)
+            new_a.append(na)
+        new_caches = {
+            "mamba": jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, 0), *new_m),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_a),
+        }
+
+    elif cfg.family == "ssm":
+        dims = _xlstm_dims(cfg)
+        kinds = jnp.asarray(
+            [1 if (cfg.slstm_every
+                   and i % cfg.slstm_every == cfg.slstm_every - 1) else 0
+             for i in range(cfg.n_layers)], jnp.int32)
+
+        def body(x, inp):
+            p, kind, mc, sc = inp
+            h = _apply_norm(cfg, p["ln"], x)
+            h_m, new_mc = xl.apply_mlstm(p["mlstm"], dims, h, cache=mc)
+            h_s, new_sc = xl.apply_slstm(p["slstm"], dims, h, cache=sc)
+            h = jnp.where(kind == 0, h_m, h_s).astype(x.dtype)
+            return x + h, (new_mc, new_sc)
+
+        x, (new_ml, new_sl) = _scan_or_unroll(
+            cfg, body, x, (params["layers"], kinds, caches["mlstm"],
+                           caches["slstm"]), cfg.n_layers)
+        new_caches = {"mlstm": new_ml, "slstm": new_sl}
+    else:
+        raise ValueError(cfg.family)
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(params["embed"], x)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return ForwardOutput(logits=logits, caches=new_caches, aux_loss=aux)
+
+
+# ----------------------------------------------------------------------------
+# Loss
+# ----------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params: dict, batch: dict,
+            aux_weight: float = 0.01) -> jax.Array:
+    """Mean next-token cross-entropy (+ MoE aux). VLM: loss on text only."""
+    out = forward(cfg, params, batch["tokens"],
+                  image_embeds=batch.get("image_embeds"))
+    logits = out.logits
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        n_img = batch["image_embeds"].shape[1]
+        logits = logits[:, n_img:]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["targets"][..., None],
+                             axis=-1)[..., 0]
+    maskf = batch["mask"].astype(jnp.float32)
+    loss = -(ll * maskf).sum() / jnp.maximum(maskf.sum(), 1.0)
+    return loss + aux_weight * out.aux_loss
+
+
+# Convenience holder used by examples
+@dataclasses.dataclass(frozen=True)
+class DecoderLM:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return init_decoder_lm(self.cfg, key)
+
+    def axes(self):
+        return decoder_lm_axes(self.cfg)
+
+    def __call__(self, params, tokens, **kw):
+        return forward(self.cfg, params, tokens, **kw)

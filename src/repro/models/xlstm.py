@@ -1,0 +1,372 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel form) + sLSTM (scalar memory).
+
+Beck et al. 2024 (arXiv:2405.04517). Both blocks use exponential gating with
+the max-stabilizer trick; the two forms implemented here are verified
+against each other by tests (token-by-token recurrence == parallel form).
+
+mLSTM — matrix memory C in R^{dh x dh} per head:
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t^T q_t / max(|n_t . q_t|, exp(-m_t))
+Training uses the attention-like parallel form with the decay matrix
+D[t,s] = logsig(f)-cumsum difference + log i, so the whole sequence is two
+MXU matmuls per head — no sequential scan (this is what makes xLSTM an
+assigned *long-context* arch: decode state is O(dh^2), not O(L)).
+
+sLSTM — scalar memory per hidden unit with head-wise recurrent mixing
+R_z/R_i/R_f/R_o (block-diagonal across heads); inherently sequential =>
+lax.scan over time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal, apply_rmsnorm
+
+LOG_EPS = -30.0
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMDims:
+    d_model: int
+    n_heads: int = 4
+    expand_m: int = 2          # mLSTM up-projection factor
+    conv_kernel: int = 4
+    chunk: int = 0             # 0 = full quadratic parallel form
+    ff_factor: float = 4.0 / 3.0  # sLSTM post-FFN
+
+    @property
+    def d_inner_m(self) -> int:
+        return self.expand_m * self.d_model
+
+    @property
+    def dh_m(self) -> int:
+        return self.d_inner_m // self.n_heads
+
+    @property
+    def dh_s(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff_s(self) -> int:
+        return int(self.ff_factor * self.d_model)
+
+
+# ----------------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------------
+
+class MLSTMCache(NamedTuple):
+    c: jax.Array      # [B, H, dh, dh] matrix memory
+    n: jax.Array      # [B, H, dh]
+    m: jax.Array      # [B, H] stabilizer
+    conv: jax.Array   # [B, k-1, d_inner] trailing conv window
+
+
+def init_mlstm_cache(dims: XLSTMDims, batch: int, dtype) -> MLSTMCache:
+    h, dh = dims.n_heads, dims.dh_m
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), LOG_EPS, jnp.float32),
+        conv=jnp.zeros((batch, dims.conv_kernel - 1, dims.d_inner_m), dtype))
+
+
+def init_mlstm(key: jax.Array, dims: XLSTMDims, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    d, di, h = dims.d_model, dims.d_inner_m, dims.n_heads
+    return {
+        "w_up": trunc_normal(ks[0], (d, 2 * di), dtype, fan_in=d),
+        "conv_w": trunc_normal(ks[1], (dims.conv_kernel, di), dtype,
+                               fan_in=dims.conv_kernel),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": trunc_normal(ks[2], (di, di), dtype, fan_in=di),
+        "wk": trunc_normal(ks[3], (di, di), dtype, fan_in=di),
+        "wv": trunc_normal(ks[4], (di, di), dtype, fan_in=di),
+        "w_if": trunc_normal(ks[5], (di, 2 * h), jnp.float32, fan_in=di),
+        "b_if": jnp.concatenate([jnp.zeros((h,)),
+                                 jnp.linspace(3.0, 6.0, h)]),  # f-bias high
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_down": trunc_normal(ks[6], (di, d), dtype, fan_in=di),
+    }
+
+
+def mlstm_axes() -> dict:
+    return {"w_up": ("embed", "mlp"), "conv_w": ("conv", "mlp"),
+            "conv_b": ("mlp",), "wq": ("mlp", "mlp2"),
+            "wk": ("mlp", "mlp2"), "wv": ("mlp", "mlp2"),
+            "w_if": ("mlp", "heads"), "b_if": ("heads",),
+            "norm_scale": ("mlp",), "w_down": ("mlp", "embed")}
+
+
+def _headwise_rmsnorm(x: jax.Array, scale: jax.Array, n_heads: int,
+                      eps: float = 1e-6) -> jax.Array:
+    """RMS-normalize each head's slice independently. x [..., di]."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], n_heads, shp[-1] // n_heads).astype(jnp.float32)
+    var = jnp.mean(xh * xh, -1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype)
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """q,k,v [B,L,H,dh]; log_i/log_f [B,L,H]. Returns h [B,L,H,dh]."""
+    dh = q.shape[-1]
+    lcum = jnp.cumsum(log_f, axis=1)                          # [B,L,H]
+    dmat = (lcum[:, :, None, :] - lcum[:, None, :, :]
+            + log_i[:, None, :, :])                           # [B,Lq,Ls,H]
+    causal = jnp.tril(jnp.ones(dmat.shape[1:3], bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2)                                 # [B,Lq,H]
+    m = jnp.maximum(m, LOG_EPS)
+    smat = jnp.einsum("blhd,bshd->blsh", q, k) * dh ** -0.5
+    smat = smat * jnp.exp(dmat - m[:, :, None, :])
+    denom = jnp.maximum(jnp.abs(smat.sum(2)), jnp.exp(-m))    # [B,L,H]
+    return jnp.einsum("blsh,bshd->blhd", smat, v) / denom[..., None], m
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int):
+    """Chunkwise-parallel mLSTM: O(L*c) instead of O(L^2).
+
+    Within a chunk the quadratic stabilized form runs on the MXU; a
+    lax.scan carries the (C, n, m) matrix-memory state across chunks —
+    the same restructuring SSD uses for Mamba2, applied to mLSTM's
+    exponential gating (the §Perf lever for xlstm train_4k, which
+    otherwise materializes [B, L, L, H] decay matrices).
+    q,k,v [B,L,H,dh]; log_i/log_f [B,L,H]. Returns h [B,L,H,dh].
+    """
+    bsz, l, h, dh = q.shape
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    def to_chunks(x):
+        return x.reshape(bsz, nc, chunk, *x.shape[2:]).transpose(
+            (1, 0) + tuple(range(2, x.ndim + 1)))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)  # [nc,B,c,H,dh]
+    ic, fc = to_chunks(log_i), to_chunks(log_f)            # [nc,B,c,H]
+
+    c0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((bsz, h, dh), jnp.float32)
+    m0 = jnp.full((bsz, h), LOG_EPS, jnp.float32)
+
+    def one_chunk(carry, inp):
+        c_st, n_st, m_st = carry
+        qq, kk, vv, li, lf = inp                          # [B,c,H,*]
+        lcum = jnp.cumsum(lf, axis=1)                     # [B,c,H]
+
+        # local max over intra-chunk sources
+        dmat = (lcum[:, :, None, :] - lcum[:, None, :, :]
+                + li[:, None, :, :])                      # [B,t,s,H]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        m_loc = jnp.max(dmat, axis=2)                     # [B,c,H]
+        m_inter = m_st[:, None, :] + lcum                 # [B,c,H]
+        m_t = jnp.maximum(jnp.maximum(m_loc, m_inter), LOG_EPS)
+
+        smat = jnp.einsum("bthd,bshd->btsh", qq, kk) * dh ** -0.5
+        smat = smat * jnp.exp(dmat - m_t[:, :, None, :])
+        num_intra = jnp.einsum("btsh,bshd->bthd", smat, vv)
+        den_intra = smat.sum(2)                           # [B,c,H]
+
+        inter_scale = jnp.exp(m_inter - m_t)              # [B,c,H]
+        num_inter = jnp.einsum("bthd,bhde->bthe", qq, c_st) * \
+            inter_scale[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qq, n_st) * inter_scale
+
+        denom = jnp.maximum(jnp.abs(den_intra + den_inter),
+                            jnp.exp(-m_t))
+        hh = (num_intra + num_inter) / denom[..., None]
+
+        # ---- chunk-end state update
+        lc_end = lcum[:, -1, :]                           # [B,H]
+        m_src = jnp.max(lc_end[:, None, :] - lcum + li, axis=1)  # [B,H]
+        m_new = jnp.maximum(jnp.maximum(m_st + lc_end, m_src), LOG_EPS)
+        src_w = jnp.exp(lc_end[:, None, :] - lcum + li
+                        - m_new[:, None, :])              # [B,c,H]
+        k_s = kk * dh ** -0.5
+        c_new = (c_st * jnp.exp(m_st + lc_end - m_new)[..., None, None]
+                 + jnp.einsum("bch,bchd,bche->bhde", src_w, k_s, vv))
+        n_new = (n_st * jnp.exp(m_st + lc_end - m_new)[..., None]
+                 + jnp.einsum("bch,bchd->bhd", src_w, k_s))
+        return (c_new, n_new, m_new), hh
+
+    (_, _, _), hs = jax.lax.scan(one_chunk, (c0, n0, m0),
+                                 (qc, kc, vc, ic, fc))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(bsz, l, h, dh)
+
+
+def _mlstm_step(cache: MLSTMCache, q, k, v, log_i, log_f):
+    """Single-token recurrence. q,k,v [B,H,dh]; log_i/f [B,H]."""
+    dh = q.shape[-1]
+    m_new = jnp.maximum(log_f + cache.m, log_i)
+    m_new = jnp.maximum(m_new, LOG_EPS)
+    f_s = jnp.exp(log_f + cache.m - m_new)[..., None]
+    i_s = jnp.exp(log_i - m_new)[..., None]
+    k_s = k * dh ** -0.5
+    c = cache.c * f_s[..., None] + i_s[..., None] * (
+        k_s[..., :, None] * v[..., None, :])                  # [B,H,dh,dh]
+    n = cache.n * f_s + i_s * k_s
+    qn = jnp.einsum("bhd,bhd->bh", n, q)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = jnp.einsum("bhde,bhd->bhe", c, q) / denom[..., None]
+    return h, c, n, m_new
+
+
+def apply_mlstm(p: dict, dims: XLSTMDims, x: jax.Array,
+                cache: Optional[MLSTMCache] = None
+                ) -> tuple[jax.Array, Optional[MLSTMCache]]:
+    """x [B, L, d] -> (y [B, L, d], cache'). cache => L == 1 decode."""
+    bsz, l, _ = x.shape
+    h_n, dh = dims.n_heads, dims.dh_m
+    up = jnp.einsum("bld,de->ble", x, p["w_up"])
+    x_in, z = jnp.split(up, 2, axis=-1)
+
+    if cache is None:
+        pad = jnp.pad(x_in, ((0, 0), (dims.conv_kernel - 1, 0), (0, 0)))
+        windows = jnp.stack(
+            [pad[:, i:i + l] for i in range(dims.conv_kernel)], axis=2)
+        xc = jax.nn.silu(jnp.einsum("blkc,kc->blc", windows, p["conv_w"])
+                         + p["conv_b"])
+        new_conv = None
+    else:
+        window = jnp.concatenate([cache.conv.astype(x_in.dtype), x_in], 1)
+        xc = jax.nn.silu((jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+                          + p["conv_b"])[:, None])
+        new_conv = window[:, 1:].astype(cache.conv.dtype)
+
+    q = jnp.einsum("blc,ce->ble", xc, p["wq"]).reshape(bsz, l, h_n, dh)
+    k = jnp.einsum("blc,ce->ble", xc, p["wk"]).reshape(bsz, l, h_n, dh)
+    v = jnp.einsum("blc,ce->ble", x_in, p["wv"]).reshape(bsz, l, h_n, dh)
+    gates = (jnp.einsum("blc,cg->blg", xc.astype(jnp.float32), p["w_if"])
+             + p["b_if"])
+    log_i, log_f = gates[..., :h_n], jax.nn.log_sigmoid(gates[..., h_n:])
+
+    if cache is None:
+        hq = q.astype(jnp.float32)
+        hk = k.astype(jnp.float32)
+        hv = v.astype(jnp.float32)
+        if dims.chunk and l > dims.chunk and l % dims.chunk == 0:
+            hidden = _mlstm_chunked(hq, hk, hv, log_i, log_f, dims.chunk)
+        else:
+            hidden, _m = _mlstm_parallel(hq, hk, hv, log_i, log_f)
+        new_cache = None
+    else:
+        hidden, c, n, m = _mlstm_step(
+            cache, q[:, 0].astype(jnp.float32),
+            k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32),
+            log_i[:, 0], log_f[:, 0])
+        hidden = hidden[:, None]
+        new_cache = MLSTMCache(c=c, n=n, m=m, conv=new_conv)
+
+    hidden = hidden.reshape(bsz, l, dims.d_inner_m).astype(x.dtype)
+    hidden = _headwise_rmsnorm(hidden, p["norm_scale"], h_n)
+    y = jnp.einsum("ble,ed->bld", hidden * jax.nn.silu(z), p["w_down"])
+    return y, new_cache
+
+
+# ----------------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------------
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array   # [B, d] cell
+    n: jax.Array   # [B, d] normalizer
+    h: jax.Array   # [B, d] hidden (recurrent input)
+    m: jax.Array   # [B, d] stabilizer
+
+
+def init_slstm_cache(dims: XLSTMDims, batch: int, dtype) -> SLSTMCache:
+    d = dims.d_model
+    return SLSTMCache(c=jnp.zeros((batch, d), jnp.float32),
+                      n=jnp.zeros((batch, d), jnp.float32),
+                      h=jnp.zeros((batch, d), jnp.float32),
+                      m=jnp.full((batch, d), LOG_EPS, jnp.float32))
+
+
+def init_slstm(key: jax.Array, dims: XLSTMDims, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    d, h_n, dh = dims.d_model, dims.n_heads, dims.dh_s
+    return {
+        "w_gates": trunc_normal(ks[0], (d, 4 * d), jnp.float32, fan_in=d),
+        "r_gates": trunc_normal(ks[1], (h_n, dh, 4 * dh), jnp.float32,
+                                fan_in=dh),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.linspace(3.0, 6.0, d),
+             jnp.zeros((d,))]),                       # (z, i, f, o) biases
+        "norm_scale": jnp.zeros((d,), jnp.float32),
+        "ff_gate": trunc_normal(ks[2], (d, dims.d_ff_s), jnp.float32,
+                                fan_in=d),
+        "ff_up": trunc_normal(ks[3], (d, dims.d_ff_s), jnp.float32,
+                              fan_in=d),
+        "ff_down": trunc_normal(ks[4], (dims.d_ff_s, d), jnp.float32,
+                                fan_in=dims.d_ff_s),
+    }
+
+
+def slstm_axes() -> dict:
+    return {"w_gates": ("embed", "mlp"), "r_gates": ("heads", "head_dim",
+                                                     "state"),
+            "b_gates": ("mlp",), "norm_scale": ("embed",),
+            "ff_gate": ("embed", "mlp"), "ff_up": ("embed", "mlp"),
+            "ff_down": ("mlp", "embed")}
+
+
+def _slstm_cell(p: dict, dims: XLSTMDims, x_t: jax.Array,
+                st: SLSTMCache) -> tuple[SLSTMCache, jax.Array]:
+    """One timestep. x_t [B, d]."""
+    d, h_n, dh = dims.d_model, dims.n_heads, dims.dh_s
+    b = x_t.shape[0]
+    hh = st.h.reshape(b, h_n, dh)
+    rec = jnp.einsum("bhd,hdg->bhg", hh, p["r_gates"]).reshape(b, 4, h_n, dh)
+    rec = rec.transpose(0, 2, 1, 3)                        # [B,H,4,dh] -> fix
+    # recombine: gates order (z,i,f,o) over the last dim blocks of r_gates
+    rec = rec.reshape(b, h_n, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    pre = (jnp.einsum("bd,dg->bg", x_t.astype(jnp.float32), p["w_gates"])
+           + rec + p["b_gates"])
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)            # [B, d] each
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + st.m, it)
+    m_new = jnp.maximum(m_new, LOG_EPS)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(log_f + st.m - m_new)
+    c = f_s * st.c + i_s * zt
+    n = jnp.maximum(f_s * st.n + i_s, 1e-6)
+    h = ot * (c / n)
+    return SLSTMCache(c=c, n=n, h=h, m=m_new), h
+
+
+def apply_slstm(p: dict, dims: XLSTMDims, x: jax.Array,
+                cache: Optional[SLSTMCache] = None
+                ) -> tuple[jax.Array, Optional[SLSTMCache]]:
+    """x [B, L, d] -> (y, cache'). Sequential lax.scan over time."""
+    bsz, l, d = x.shape
+    if cache is not None:
+        st0 = cache
+    else:
+        # derive zeros from x (not fresh constants) so the scan carry keeps
+        # x's varying-axes under shard_map
+        zero = 0.0 * x[:, 0, :].astype(jnp.float32)        # [B, d]
+        st0 = SLSTMCache(c=zero, n=zero, h=zero, m=zero + LOG_EPS)
+
+    def step(st, x_t):
+        st, h = _slstm_cell(p, dims, x_t, st)
+        return st, h
+
+    st, hs = jax.lax.scan(step, st0, x.transpose(1, 0, 2))
+    hidden = hs.transpose(1, 0, 2).astype(x.dtype)         # [B, L, d]
+    hidden = _headwise_rmsnorm(hidden, p["norm_scale"], dims.n_heads)
+    # gated FFN (factor 4/3, GeLU)
+    y = jnp.einsum("blf,fd->bld",
+                   jax.nn.gelu(jnp.einsum("bld,df->blf", hidden,
+                                          p["ff_gate"]), approximate=True)
+                   * jnp.einsum("bld,df->blf", hidden, p["ff_up"]),
+                   p["ff_down"])
+    return y.astype(x.dtype), (st if cache is not None else None)

@@ -1,0 +1,10 @@
+"""Optimizers (adamw / adafactor / sgd) and LR + rho_t schedules."""
+
+from repro.optim.optimizers import (Optimizer, adamw, adafactor, sgd,
+                                    make_optimizer)
+from repro.optim.schedules import (constant_lr, cosine_warmup, rsqrt_warmup,
+                                   make_lr_schedule)
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd", "make_optimizer",
+           "constant_lr", "cosine_warmup", "rsqrt_warmup",
+           "make_lr_schedule"]

@@ -1,0 +1,139 @@
+"""Minimal functional optimizers (optax-style init/update pairs).
+
+AdamW for <=10B-class archs; Adafactor (factored second moment, no first
+moment, per Shazeer & Stern 2018) for the 72B/480B/1T archs where Adam
+moments alone would exceed HBM (see DESIGN.md §5). Update functions are
+pure and pytree-polymorphic, so optimizer state shards exactly like params
+under the same logical rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _tree_zeros_like(tree, dtype=jnp.float32):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+def sgd(lr_fn, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params),
+                "v": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (step_ + weight_decay * p32)
+            return p32.astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda x: x[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda x: x[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda x: x[2], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0
+              ) -> Optimizer:
+    """Factored second moment: O(r+c) state for matrices, O(n) for vectors."""
+
+    def _factored(x) -> bool:
+        return x.ndim >= 2
+
+    def init(params):
+        def one(x):
+            if _factored(x):
+                return {"vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_pow)
+        lr = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (u + weight_decay * p32)
+            return p32.astype(p.dtype), new_s
+
+        out = jax.tree.map(upd, params, grads, state,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("v" in x or "vr" in x))
+        new_params = jax.tree.map(lambda x: x[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda x: x[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(kind: str, lr_fn) -> Optimizer:
+    if kind == "adamw":
+        return adamw(lr_fn)
+    if kind == "adafactor":
+        return adafactor(lr_fn)
+    if kind == "sgd":
+        return sgd(lr_fn)
+    raise ValueError(f"unknown optimizer {kind!r}")

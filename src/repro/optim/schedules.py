@@ -1,0 +1,43 @@
+"""Learning-rate schedules (and re-export of the G-OEM rho_t schedule)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.oem import make_rho_schedule  # noqa: F401  (re-export)
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        # warmup from peak/warmup (not 0): step 0 must actually update
+        warm = peak * jnp.minimum((s + 1.0) / max(warmup, 1), 1.0)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def rsqrt_warmup(peak: float, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32) + 1.0
+        return peak * jnp.minimum(s / max(warmup, 1),
+                                  (warmup / s) ** 0.5 if warmup else 1.0)
+    return fn
+
+
+def make_lr_schedule(kind: str, peak: float, warmup: int = 100,
+                     total: int = 1000):
+    if kind == "constant":
+        return constant_lr(peak)
+    if kind == "cosine":
+        return cosine_warmup(peak, warmup, total)
+    if kind == "rsqrt":
+        return rsqrt_warmup(peak, warmup)
+    raise ValueError(f"unknown lr schedule {kind!r}")

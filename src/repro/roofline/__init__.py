@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e model)."""
+
+from repro.roofline.hlo import collective_bytes, parse_collectives
+from repro.roofline.model import (HW, RooflineReport, analyze,
+                                  model_flops)
+
+__all__ = ["collective_bytes", "parse_collectives", "HW", "RooflineReport",
+           "analyze", "model_flops"]

@@ -1,0 +1,96 @@
+"""Three-term roofline model for TPU v5e.
+
+    compute term    = HLO_FLOPs  / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes  / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() on a GSPMD-partitioned module reports PER-DEVICE flops and
+bytes (the module is the per-device program), so the `chips` division is
+already baked in for those two terms; collective bytes from hlo.py are also
+per-device. We therefore use the per-device form of each term; the prompt's
+global form is equivalent (both numerator and denominator scale by chips).
+
+MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE) per training step, the
+usual 2x fwd + 4x bwd estimate; serving steps use 2 N D per generated/
+scored token. The MODEL_FLOPS / HLO_FLOPs ratio flags remat recompute and
+padding waste (ratio < 1 means the compiled program does extra compute;
+with full remat expect ~0.75 for training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e chip."""
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # bytes/s
+    link_bw: float = 50e9             # bytes/s per ICI link
+
+
+V5E = HW()
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_sec: float
+    memory_sec: float
+    collective_sec: float
+    dominant: str
+    model_flops_total: float
+    useful_flops_ratio: float         # MODEL_FLOPS / (HLO_FLOPs * chips)
+    collectives: dict
+    memory_analysis: Optional[dict] = None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Analytic useful FLOPs for one step of this (arch, shape)."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(cfg: ModelConfig, shape: InputShape, mesh_name: str, chips: int,
+            flops_per_device: float, bytes_per_device: float,
+            coll_bytes_per_device: float, collectives: dict,
+            memory_analysis: Optional[dict] = None,
+            hw: HW = V5E) -> RooflineReport:
+    compute_sec = flops_per_device / hw.peak_flops
+    memory_sec = bytes_per_device / hw.hbm_bw
+    collective_sec = coll_bytes_per_device / hw.link_bw
+    terms = {"compute": compute_sec, "memory": memory_sec,
+             "collective": collective_sec}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    total_hlo = flops_per_device * chips
+    ratio = mf / total_hlo if total_hlo else 0.0
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_device=flops_per_device,
+        hlo_bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=coll_bytes_per_device,
+        compute_sec=compute_sec, memory_sec=memory_sec,
+        collective_sec=collective_sec, dominant=dominant,
+        model_flops_total=mf, useful_flops_ratio=ratio,
+        collectives=collectives, memory_analysis=memory_analysis)

@@ -1,0 +1,12 @@
+"""Logical-axis sharding: rules mapping logical names to mesh axes."""
+
+from repro.sharding.axes import (LOGICAL_RULES, FSDP_RULES, DP_ONLY_RULES,
+                                 logical_sharding,
+                                 logical_to_spec, shard_constraint,
+                                 spec_for_shape, tree_shardings,
+                                 tree_shardings_for)
+
+__all__ = ["LOGICAL_RULES", "FSDP_RULES", "DP_ONLY_RULES",
+           "logical_sharding",
+           "logical_to_spec", "shard_constraint", "spec_for_shape",
+           "tree_shardings", "tree_shardings_for"]

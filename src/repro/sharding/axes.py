@@ -1,0 +1,192 @@
+"""Logical axis names -> mesh axes (MaxText-style sharding rules).
+
+Every parameter/activation carries a tuple of *logical* axis names (one per
+dim). Rules translate those to mesh axes; unlisted names are replicated.
+The same model code then runs on any mesh — single-pod (data, model),
+multi-pod (pod, data, model) or a single CPU device (everything maps to
+None) — by swapping the rule set.
+
+Rule sets:
+  LOGICAL_RULES  baseline megatron-style tensor parallelism: weights with a
+                 "wide" axis (vocab/heads/mlp/experts) shard over "model";
+                 batch shards over ("pod", "data"); everything else
+                 replicated.
+  FSDP_RULES     additionally shards the embed/stack axes over ("pod",
+                 "data") — ZeRO-3-ish parameter sharding for the large
+                 dense archs so optimizer state fits at 72B+.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Sequence[tuple[str, Optional[object]]]
+
+LOGICAL_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("cache_seq", "model"),    # decode KV cache: context-parallel fallback
+    ("tokens", ("pod", "data")),  # flattened B*S activation rows
+    ("qseq", "model"),         # query-chunk rows (context parallelism)
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("experts", "model"),
+    ("embed", None),
+    ("embed2", None),          # second embed-sized dim (square projections)
+    ("layers", None),
+    ("head_dim", None),
+    ("state", None),
+    ("conv", None),
+    ("expert_mlp", None),
+    ("mlp2", None),            # square d_inner x d_inner projections (xlstm)
+    ("frames", None),
+    ("act_embed", None),       # activation feature dim (replicated)
+)
+
+FSDP_RULES: Rules = tuple(
+    [("embed", ("pod", "data")), ("layers", None)]
+    + [r for r in LOGICAL_RULES if r[0] not in ("embed",)])
+
+# Pure data parallelism: the batch absorbs EVERY mesh axis (256-way DP on
+# a single pod) and params replicate. The right layout for small archs
+# (xlstm-125m) where per-layer TP collectives dwarf the matmuls they
+# shard (see EXPERIMENTS.md SPerf E6/E7).
+DP_ONLY_RULES: Rules = tuple(
+    [("batch", ("pod", "data", "model"))]
+    + [(k, None if v == "model" else v)
+       for k, v in LOGICAL_RULES if k != "batch"])
+
+
+def _mesh_axes(mesh: Mesh):
+    return set(mesh.axis_names)
+
+
+def logical_to_spec(axes: tuple[str, ...], mesh: Mesh,
+                    rules: Rules = LOGICAL_RULES) -> P:
+    """Translate a tuple of logical names to a PartitionSpec on `mesh`.
+
+    Mesh axes missing from the mesh (e.g. "pod" on a single-pod mesh) are
+    dropped; a mesh axis may be consumed at most once per spec.
+    """
+    table = dict(rules)
+    present = _mesh_axes(mesh)
+    used: set[str] = set()
+    out = []
+    for name in axes:
+        target = table.get(name)
+        if target is None:
+            out.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        picked = tuple(a for a in target if a in present and a not in used)
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    return P(*out)
+
+
+def logical_sharding(axes: tuple[str, ...], mesh: Mesh,
+                     rules: Rules = LOGICAL_RULES) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, mesh, rules))
+
+
+def _is_axes_leaf(x) -> bool:
+    return (isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x))
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: Rules = LOGICAL_RULES):
+    """Map a pytree of logical-axes tuples to NamedShardings.
+
+    Leaves are tuples of str; treat them as leaves (not containers).
+    """
+    return jax.tree.map(
+        lambda axes: logical_sharding(axes, mesh, rules),
+        axes_tree, is_leaf=_is_axes_leaf)
+
+
+def _shard_size(mesh, target) -> int:
+    """Axis sizes via mesh.shape (works for Mesh AND AbstractMesh)."""
+    names = (target,) if isinstance(target, str) else tuple(target)
+    shape = dict(mesh.shape)
+    size = 1
+    for n in names:
+        size *= shape.get(n, 1)
+    return size
+
+
+# logical names processed LAST in spec_for_shape: they pick up whatever mesh
+# axes remain (e.g. the KV-cache sequence axis absorbs "model" only when the
+# kv_heads axis could not use it — context-parallel decode fallback).
+_FALLBACK_NAMES = ("cache_seq",)
+
+
+def spec_for_shape(shape: tuple[int, ...], axes: tuple[str, ...],
+                   mesh: Mesh, rules: Rules = LOGICAL_RULES) -> P:
+    """Shape-aware spec: greedy allocation honoring even divisibility.
+
+    E.g. kv_heads=8 on a model=16 mesh falls back to replication instead
+    of an invalid sharding (GSPMD requires even divisibility); the
+    "cache_seq" axis then absorbs the freed "model" axis.
+    """
+    table = dict(rules)
+    present = _mesh_axes(mesh)
+    used: set[str] = set()
+    out: list = [None] * len(shape)
+
+    def alloc(i: int):
+        name = axes[i] if i < len(axes) else None
+        target = table.get(name) if name else None
+        if target is None:
+            return
+        names = (target,) if isinstance(target, str) else tuple(target)
+        kept, size_so_far = [], 1
+        for n in names:
+            if n not in present or n in used:
+                continue
+            ax = _shard_size(mesh, n)
+            if ax > 1 and shape[i] % (size_so_far * ax) == 0:
+                kept.append(n)
+                used.add(n)
+                size_so_far *= ax
+        if kept:
+            out[i] = kept[0] if len(kept) == 1 else tuple(kept)
+
+    order = ([i for i in range(len(shape))
+              if (axes[i] if i < len(axes) else None)
+              not in _FALLBACK_NAMES]
+             + [i for i in range(len(shape))
+                if (axes[i] if i < len(axes) else None) in _FALLBACK_NAMES])
+    for i in order:
+        alloc(i)
+    return P(*out)
+
+
+def tree_shardings_for(shapes_tree, axes_tree, mesh: Mesh,
+                       rules: Rules = LOGICAL_RULES):
+    """Shape-aware tree_shardings: shapes_tree holds ShapeDtypeStructs
+    (or arrays) with the same structure as axes_tree."""
+    return jax.tree.map(
+        lambda shp, axes: NamedSharding(
+            mesh, spec_for_shape(tuple(shp.shape), axes, mesh, rules)),
+        shapes_tree, axes_tree,
+        is_leaf=lambda x: _is_axes_leaf(x) or hasattr(x, "shape"))
+
+
+def shard_constraint(x: jax.Array, axes: tuple[str, ...], mesh: Mesh | None,
+                     rules: Rules = LOGICAL_RULES) -> jax.Array:
+    """Annotate an activation with its logical sharding (no-op off-mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, logical_sharding(axes, mesh, rules))

@@ -1,0 +1,45 @@
+"""Activation-sharding context: lets model code annotate intermediates
+without threading a mesh through every call.
+
+launch.steps.build installs the (mesh, rules) context around tracing;
+`constrain(x, axes)` then becomes `with_sharding_constraint` with the
+shape-aware spec, and is a no-op when no context is active (CPU tests,
+simulation substrate). This is how the MoE dispatch pins its [T*k, d]
+intermediates to stay token-sharded (see EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.axes import LOGICAL_RULES, Rules, spec_for_shape
+
+_STATE = threading.local()
+
+
+def current() -> Optional[tuple[Mesh, Rules]]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Rules = LOGICAL_RULES):
+    prev = current()
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Annotate activation x with logical axes; no-op without a context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for_shape(tuple(x.shape), axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,12 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real device
+count (1 CPU); multi-device mesh behaviour is tested via subprocesses in
+test_mesh_collectives.py, and the 512-device production meshes only ever
+exist inside repro.launch.dryrun."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

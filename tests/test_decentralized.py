@@ -1,0 +1,81 @@
+"""Gossip sync for pytrees: parsing, exactness, byte model, sim substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decentralized as dec
+
+
+def test_parse_sync():
+    assert dec.parse_sync("allreduce") == dec.SyncSpec("allreduce", None)
+    assert dec.parse_sync("gossip-hypercube") == dec.SyncSpec("hypercube",
+                                                              None)
+    assert dec.parse_sync("gossip-hypercube[3]") == dec.SyncSpec(
+        "hypercube", 3)
+    assert dec.parse_sync("gossip-ring[2]") == dec.SyncSpec("ring", 2)
+    with pytest.raises(ValueError):
+        dec.parse_sync("gossip-tree")
+
+
+def _tree(n, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"a": jax.random.normal(k1, (n, 4)),
+            "b": {"c": jax.random.normal(k2, (n, 2, 3))}}
+
+
+def test_allreduce_sim_exact():
+    t = _tree(8)
+    out = dec.sync_tree_sim(t, dec.parse_sync("allreduce"), 8)
+    for leaf, orig in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   np.asarray(orig.mean(0))[None].repeat(
+                                       8, 0), atol=1e-6)
+
+
+def test_hypercube_sim_exact_consensus():
+    t = _tree(8)
+    out = dec.sync_tree_sim(t, dec.parse_sync("gossip-hypercube"), 8)
+    ref = dec.sync_tree_sim(t, dec.parse_sync("allreduce"), 8)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@given(st.integers(1, 2), st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_partial_gossip_contracts_and_preserves_mean(rounds, seed):
+    t = _tree(8, seed)
+    spec = dec.SyncSpec("hypercube", rounds)
+    out = dec.sync_tree_sim(t, spec, 8)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        # mean preserved
+        np.testing.assert_allclose(np.asarray(a.mean(0)),
+                                   np.asarray(b.mean(0)), atol=1e-5)
+        # consensus distance non-increasing
+        d_in = float(jnp.linalg.norm(b - b.mean(0, keepdims=True)))
+        d_out = float(jnp.linalg.norm(a - a.mean(0, keepdims=True)))
+        assert d_out <= d_in + 1e-6
+
+
+def test_is_exact():
+    assert dec.is_exact(dec.parse_sync("allreduce"), (16,))
+    assert dec.is_exact(dec.parse_sync("gossip-hypercube"), (16,))
+    assert dec.is_exact(dec.parse_sync("gossip-hypercube[4]"), (16,))
+    assert not dec.is_exact(dec.parse_sync("gossip-hypercube[3]"), (16,))
+    assert not dec.is_exact(dec.parse_sync("gossip-ring[2]"), (16,))
+
+
+def test_collective_bytes_model():
+    payload = 1024
+    ar = dec.collective_bytes_per_sync(dec.parse_sync("allreduce"),
+                                       payload, (16,))
+    hc = dec.collective_bytes_per_sync(dec.parse_sync("gossip-hypercube"),
+                                       payload, (16,))
+    h1 = dec.collective_bytes_per_sync(
+        dec.parse_sync("gossip-hypercube[1]"), payload, (16,))
+    assert ar == int(2 * payload * 15 / 16)
+    assert hc == 4 * payload          # log2(16) rounds
+    assert h1 == payload              # single round: half the all-reduce
+    assert h1 < ar < hc

@@ -1,0 +1,56 @@
+"""Left-to-right perplexity estimator sanity."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.evaluation import (left_to_right_log_likelihood,
+                                   log_perplexity,
+                                   relative_perplexity_error)
+from repro.core.lda import LDAConfig
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+CFG = LDAConfig(n_topics=4, vocab_size=30, alpha=0.5, doc_len_max=12,
+                n_gibbs=6, n_gibbs_burnin=3)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CFG, jax.random.key(0),
+                       CorpusSpec(n_nodes=2, docs_per_node=5, n_test=16))
+
+
+def test_loglik_finite_and_negative(corpus):
+    ll = left_to_right_log_likelihood(
+        jax.random.key(1), corpus.test_words, corpus.test_mask,
+        corpus.beta_star, CFG.alpha, n_particles=5)
+    assert ll.shape == (16,)
+    assert bool(jnp.isfinite(ll).all())
+    assert bool((ll < 0).all())
+
+
+def test_true_params_beat_uniform(corpus):
+    """LP under the generating beta* must beat a uniform topic matrix."""
+    lp_star = log_perplexity(jax.random.key(2), corpus.test_words,
+                             corpus.test_mask, corpus.beta_star, CFG.alpha,
+                             n_particles=5)
+    uniform = jnp.full((CFG.n_topics, CFG.vocab_size),
+                       1.0 / CFG.vocab_size)
+    lp_unif = log_perplexity(jax.random.key(2), corpus.test_words,
+                             corpus.test_mask, uniform, CFG.alpha,
+                             n_particles=5)
+    assert float(lp_star) < float(lp_unif)
+    assert float(relative_perplexity_error(lp_unif, lp_star)) > 0
+
+
+def test_more_particles_reduce_variance(corpus):
+    lps = [float(log_perplexity(jax.random.key(s), corpus.test_words,
+                                corpus.test_mask, corpus.beta_star,
+                                CFG.alpha, n_particles=2))
+           for s in range(4)]
+    lps_many = [float(log_perplexity(jax.random.key(s), corpus.test_words,
+                                     corpus.test_mask, corpus.beta_star,
+                                     CFG.alpha, n_particles=16))
+                for s in range(4)]
+    import numpy as np
+    assert np.std(lps_many) <= np.std(lps) + 0.05

@@ -1,0 +1,104 @@
+"""Gossip mixing: mass conservation, consensus contraction, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gossip
+from repro.core.graph import complete_graph, watts_strogatz_graph
+
+
+def _rand_stats(n, seed=0, shape=(3, 7)):
+    return jax.random.normal(jax.random.key(seed), (n, *shape))
+
+
+def test_mix_edge_preserves_mean_and_averages():
+    s = _rand_stats(6)
+    out = gossip.mix_edge(s, jnp.asarray(1), jnp.asarray(4))
+    np.testing.assert_allclose(np.asarray(out.mean(0)),
+                               np.asarray(s.mean(0)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(out[4]))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(s[0]))
+
+
+@given(st.integers(2, 16), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_mix_matching_preserves_mean(n, seed):
+    rng = np.random.default_rng(seed)
+    # random involution
+    p = np.arange(n)
+    order = rng.permutation(n)
+    for a, b in zip(order[::2], order[1::2]):
+        if rng.random() < 0.7:
+            p[a], p[b] = b, a
+    s = _rand_stats(n, seed)
+    out = gossip.mix_matching(s, jnp.asarray(p))
+    np.testing.assert_allclose(np.asarray(out.mean(0)),
+                               np.asarray(s.mean(0)), atol=1e-5)
+
+
+def test_hypercube_rounds_reach_exact_consensus():
+    n = 8
+    s = _rand_stats(n, 3)
+    for r in gossip.hypercube_partners(n):
+        s = gossip.mix_matching(s, jnp.asarray(r))
+    target = np.asarray(_rand_stats(n, 3).mean(0))
+    np.testing.assert_allclose(np.asarray(s[0]), target, atol=1e-5)
+    for i in range(1, n):
+        np.testing.assert_allclose(np.asarray(s[i]), np.asarray(s[0]),
+                                   atol=1e-6)
+
+
+def test_ring_matchings_contract():
+    n = 8
+    s = _rand_stats(n, 4)
+    d0 = float(gossip.consensus_distance(s))
+    rounds = gossip.ring_matchings(n)
+    for k in range(6):
+        s = gossip.mix_matching(s, jnp.asarray(rounds[k % 2]))
+    assert float(gossip.consensus_distance(s)) < 0.5 * d0
+
+
+def test_consensus_contraction_rate_matches_lambda2():
+    """E[consensus^2] contracts at least as fast as lambda2 per uniform
+    random edge activation (Boyd et al. 2006)."""
+    g = complete_graph(10)
+    lam2 = g.lambda2()
+    rng = np.random.default_rng(0)
+    trials = []
+    for t in range(30):
+        s = _rand_stats(10, seed=t, shape=(4,))
+        d0 = float(gossip.consensus_distance(s)) ** 2
+        e = g.edges[rng.integers(0, g.n_edges)]
+        s2 = gossip.mix_edge(s, jnp.asarray(e[0]), jnp.asarray(e[1]))
+        trials.append(float(gossip.consensus_distance(s2)) ** 2 / d0)
+    assert np.mean(trials) <= lam2 + 0.05
+
+
+def test_mixing_matrix_properties():
+    w = gossip.mixing_matrix_edge(5, 1, 3)
+    np.testing.assert_allclose(w.sum(0), 1.0)
+    np.testing.assert_allclose(w @ w, w, atol=1e-12)   # projection
+    p = np.array([1, 0, 3, 2, 4])
+    wm = gossip.mixing_matrix_matching(p)
+    np.testing.assert_allclose(wm.sum(0), 1.0)
+    np.testing.assert_allclose(wm, wm.T)
+
+
+def test_schedules_shapes():
+    g = watts_strogatz_graph(12, 4, 0.3, seed=0)
+    rng = np.random.default_rng(0)
+    edges = gossip.draw_edge_schedule(g, 50, rng)
+    assert edges.shape == (50, 2)
+    m = gossip.draw_matching_schedule(g, 5, rng)
+    assert m.shape == (5, 12)
+    for row in m:
+        np.testing.assert_array_equal(row[row], np.arange(12))  # involution
+
+
+def test_envelope_monotone_in_lambda2():
+    rhos = 1.0 / np.arange(1, 101) ** 0.6
+    e_fast = gossip.consensus_envelope(0.2, rhos, 1.0)
+    e_slow = gossip.consensus_envelope(0.9, rhos, 1.0)
+    assert e_fast[-1] < e_slow[-1]

@@ -1,0 +1,72 @@
+"""Graph/topology tests: spectral properties driving eq. (3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+
+
+def test_complete_graph_counts():
+    g = G.complete_graph(50)
+    assert g.n_edges == 1225           # the paper's |E|
+    assert g.is_connected()
+
+
+def test_watts_strogatz_paper_setup():
+    g = G.watts_strogatz_graph(50, k=4, p=0.3, seed=0)
+    assert g.n_edges == 100            # the paper's 100 edges
+    assert g.is_connected()
+
+
+def test_lambda2_ordering_matches_connectivity():
+    """Better-connected graphs contract consensus faster (paper §4)."""
+    complete = G.complete_graph(20)
+    ws = G.watts_strogatz_graph(20, 4, 0.3, seed=1)
+    ring = G.ring_graph(20)
+    assert complete.lambda2() < ws.lambda2() < ring.lambda2()
+
+
+@given(st.integers(3, 12), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_lambda2_in_unit_interval(n, seed):
+    g = G.erdos_renyi_graph(n, 0.6, seed=seed)
+    lam2 = g.lambda2()
+    assert 0.0 <= lam2 < 1.0 + 1e-9
+
+
+def test_expected_w_doubly_stochastic():
+    g = G.watts_strogatz_graph(16, 4, 0.3, seed=2)
+    ew = g.expected_w()
+    np.testing.assert_allclose(ew.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(ew.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(ew, ew.T, atol=1e-12)
+
+
+def test_graph_validation():
+    with pytest.raises(ValueError):
+        G.Graph(3, np.array([[0, 0]]))          # self loop
+    with pytest.raises(ValueError):
+        G.Graph(3, np.array([[0, 5]]))          # out of range
+    with pytest.raises(ValueError):
+        G.Graph(3, np.array([[0, 1], [1, 0]]))  # duplicate
+
+
+def test_hypercube_and_grid():
+    h = G.hypercube_graph(3)
+    assert h.n_nodes == 8 and h.n_edges == 12
+    gr = G.grid_graph(3, 4)
+    assert gr.n_nodes == 12 and gr.is_connected()
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_random_matching_is_matching(seed):
+    g = G.watts_strogatz_graph(20, 4, 0.3, seed=3)
+    rng = np.random.default_rng(seed)
+    m = G.random_matching(g, rng)
+    nodes = m.reshape(-1)
+    assert len(nodes) == len(set(nodes.tolist()))    # disjoint
+    edge_set = {(int(a), int(b)) for a, b in np.sort(g.edges, 1)}
+    for i, j in np.sort(m, 1):
+        assert (int(i), int(j)) in edge_set          # real edges

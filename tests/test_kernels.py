@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose against the ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gibbs as core_gibbs
+from repro.core.lda import LDAConfig, eta_star
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gossip_mix.ops import mix_matching
+from repro.kernels.gossip_mix.ref import mix_matching_ref
+from repro.kernels.lda_gibbs import ops as gibbs_ops
+from repro.kernels.lda_gibbs.ref import gibbs_sweeps_ref
+from repro.core.gossip import hypercube_partners, ring_matchings
+
+
+# ---------------------------------------------------------------------------
+# lda_gibbs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,k,v,dtype", [
+    (8, 16, 4, 32, jnp.float32),
+    (5, 12, 8, 64, jnp.float32),     # unpadded B
+    (16, 8, 3, 16, jnp.float32),
+    (8, 16, 4, 32, jnp.bfloat16),
+])
+def test_lda_gibbs_matches_ref(b, l, k, v, dtype):
+    key = jax.random.key(b * l)
+    words = jax.random.randint(key, (b, l), 0, v)
+    maskf = (jax.random.uniform(jax.random.key(1), (b, l)) < 0.8).astype(
+        dtype)
+    beta = eta_star(jax.random.uniform(jax.random.key(2), (k, v))).astype(
+        dtype)
+    beta_w = jnp.take(beta.T, words, axis=0)
+    u = jax.random.uniform(jax.random.key(3), (5, b, l), dtype)
+    z0 = jax.random.randint(jax.random.key(4), (b, l), 0, k)
+
+    pk = gibbs_ops.gibbs_sweeps(beta_w, maskf, u, z0, alpha=0.5, n_sweeps=5,
+                                burnin=2)
+    pr = gibbs_sweeps_ref(beta_w, maskf, u, z0, alpha=0.5, n_sweeps=5,
+                          burnin=2)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_array_equal(np.asarray(pk[1]), np.asarray(pr[1]))
+    np.testing.assert_allclose(np.asarray(pk[0], np.float32),
+                               np.asarray(pr[0], np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(pk[2], np.float32),
+                               np.asarray(pr[2], np.float32), atol=tol)
+
+
+def test_lda_gibbs_estep_matches_core_bitexact():
+    """ops.gibbs_estep is PRNG-stream compatible with core.gibbs."""
+    cfg = LDAConfig(n_topics=5, vocab_size=64, alpha=0.5, doc_len_max=12,
+                    n_gibbs=6, n_gibbs_burnin=3)
+    key = jax.random.key(7)
+    words = jax.random.randint(jax.random.key(1), (10, 12), 0, 64)
+    mask = jax.random.uniform(jax.random.key(2), (10, 12)) < 0.9
+    beta = eta_star(jax.random.uniform(jax.random.key(3), (5, 64)))
+    rk = gibbs_ops.gibbs_estep(cfg, key, words, mask, beta)
+    rc = core_gibbs.gibbs_estep(cfg, key, words, mask, beta)
+    for name in ("stats", "z", "n_dk", "theta"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(rk, name), np.float64),
+            np.asarray(getattr(rc, name), np.float64), atol=1e-6,
+            err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# gossip_mix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,v", [(8, 5, 100), (4, 16, 512), (16, 8, 96),
+                                   (2, 3, 7)])
+def test_gossip_mix_matches_ref(n, k, v):
+    stats = jax.random.uniform(jax.random.key(n), (n, k, v))
+    partners = [jnp.arange(n, dtype=jnp.int32)]
+    if n >= 2 and n & (n - 1) == 0:
+        partners.append(jnp.asarray(hypercube_partners(n)[0]))
+    partners.append(jnp.asarray(ring_matchings(n)[0]))
+    for p in partners:
+        out = mix_matching(stats, p)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(mix_matching_ref(stats, p)),
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,b,sq,sk,h,hkv,d,kw", [
+    ("causal", 2, 128, 128, 4, 2, 64, {}),
+    ("unaligned", 1, 100, 100, 2, 2, 32, {}),
+    ("mha", 1, 64, 64, 2, 2, 16, {}),
+    ("window", 1, 192, 192, 4, 1, 64, {"window": 64}),
+    ("softcap", 1, 128, 128, 2, 2, 64, {"softcap": 30.0}),
+    ("decode", 2, 1, 192, 4, 2, 64, {"q_offset": 191}),
+    ("win+cap", 1, 128, 128, 4, 4, 32, {"window": 32, "softcap": 50.0}),
+])
+def test_flash_attention_matches_ref(name, b, sq, sk, h, hkv, d, kw):
+    kq, kk, kv = jax.random.split(jax.random.key(hash(name) % 2**31), 3)
+    q = jax.random.normal(kq, (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(kk, (b, sk, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (b, sk, hkv, d), jnp.float32)
+    out = flash_attention(q, k, v, blk_q=64, blk_k=64, causal=True, **kw)
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    ref = attention_ref(qr, kr, vr, causal=True, **kw).reshape(
+        b, h, sq, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.key(0), (1, 64, 2, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, 64, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, 64, 2, 32), jnp.bfloat16)
+    out = flash_attention(q, k, v, blk_q=64, blk_k=64)
+    ref = attention_ref(q.transpose(0, 2, 1, 3).reshape(2, 64, 32),
+                        k.transpose(0, 2, 1, 3).reshape(2, 64, 32),
+                        v.transpose(0, 2, 1, 3).reshape(2, 64, 32))
+    ref = ref.reshape(1, 2, 64, 32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)

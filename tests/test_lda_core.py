@@ -1,0 +1,81 @@
+"""Unit + property tests for the LDA model layer (core/lda.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lda import (LDAConfig, beta_distance, eta_star, init_stats,
+                            sample_document, sample_topic_matrix)
+
+CFG = LDAConfig(n_topics=5, vocab_size=50, alpha=0.5, doc_len_max=16,
+                n_gibbs=6, n_gibbs_burnin=3)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        LDAConfig(n_topics=1, vocab_size=50)
+    with pytest.raises(ValueError):
+        LDAConfig(n_topics=5, vocab_size=1)
+    with pytest.raises(ValueError):
+        LDAConfig(n_topics=5, vocab_size=50, n_gibbs=5, n_gibbs_burnin=5)
+
+
+def test_init_stats_valid():
+    s = init_stats(CFG, jax.random.key(0))
+    assert s.shape == (5, 50)
+    assert bool((s >= 0).all())
+    np.testing.assert_allclose(np.asarray(s.sum(1)), 1.0, rtol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1e-4, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_eta_star_is_simplex(seed, tau):
+    """M-step output rows are valid distributions for any positive stats."""
+    s = jax.random.gamma(jax.random.key(seed), 1.0, (4, 20))
+    beta = eta_star(s, tau)
+    assert bool((beta > 0).all())
+    np.testing.assert_allclose(np.asarray(beta.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_eta_star_argmax_property():
+    """eta*(s) maximizes <log beta, s> over the simplex (multinomial MLE):
+    any perturbed row-stochastic matrix scores lower."""
+    key = jax.random.key(1)
+    s = jax.random.gamma(key, 1.0, (3, 10))
+    beta = eta_star(s, tau=0.0)
+
+    def score(b):
+        return float((s * jnp.log(b + 1e-30)).sum())
+
+    base = score(beta)
+    for seed in range(5):
+        pert = beta + 0.05 * jax.random.uniform(jax.random.key(seed),
+                                                beta.shape)
+        pert = pert / pert.sum(-1, keepdims=True)
+        assert score(pert) <= base + 1e-5
+
+
+def test_beta_distance_permutation_invariant():
+    beta = np.asarray(sample_topic_matrix(CFG, jax.random.key(2)))
+    perm = np.asarray([3, 1, 4, 2, 0])
+    d = float(beta_distance(jnp.asarray(beta[perm]), jnp.asarray(beta)))
+    assert d < 1e-3
+
+
+def test_beta_distance_zero_iff_equal_scale():
+    beta = sample_topic_matrix(CFG, jax.random.key(3))
+    assert float(beta_distance(beta, beta)) < 1e-5
+    other = sample_topic_matrix(CFG, jax.random.key(4))
+    assert float(beta_distance(other, beta)) > 0.05
+
+
+def test_sample_document_masks_and_range():
+    beta = sample_topic_matrix(CFG, jax.random.key(5))
+    words, mask = sample_document(CFG, jax.random.key(6), beta,
+                                  jnp.asarray(7))
+    assert words.shape == (16,) and mask.shape == (16,)
+    assert int(mask.sum()) == 7
+    assert bool((words >= 0).all()) and bool((words < 50).all())
+    assert bool((jnp.where(mask, 0, words) == 0).all())

@@ -1,0 +1,79 @@
+"""Optimizers decrease a quadratic; checkpoint roundtrips arbitrary trees."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.optim import make_optimizer, make_lr_schedule
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor", "sgd"])
+def test_optimizer_decreases_quadratic(kind):
+    target = {"w": jnp.asarray([1.5, -2.0, 0.5]),
+              "m": jnp.full((4, 5), 3.0)}
+    params = jax.tree.map(jnp.zeros_like, target)
+    opt = make_optimizer(kind, make_lr_schedule("constant", 0.05))
+    state = opt.init(params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+
+    l0 = float(loss(params))
+    step = jnp.zeros((), jnp.int32)
+    for i in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, step + i)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    params = {"mat": jnp.zeros((64, 32)), "vec": jnp.zeros((16,))}
+    opt = make_optimizer("adafactor", make_lr_schedule("constant", 0.01))
+    st = opt.init(params)
+    assert st["mat"]["vr"].shape == (64,)
+    assert st["mat"]["vc"].shape == (32,)
+    assert st["vec"]["v"].shape == (16,)
+    n_state = sum(x.size for x in jax.tree.leaves(st))
+    n_param = sum(x.size for x in jax.tree.leaves(params))
+    assert n_state < 0.1 * n_param
+
+
+def test_lr_schedules():
+    cos = make_lr_schedule("cosine", 1.0, warmup=10, total=100)
+    assert 0.0 < float(cos(jnp.asarray(0))) <= 0.2   # warm but nonzero
+    assert abs(float(cos(jnp.asarray(9))) - 1.0) < 1e-6
+    assert float(cos(jnp.asarray(100))) < 0.2
+    const = make_lr_schedule("constant", 0.3)
+    assert float(const(jnp.asarray(7))) == pytest.approx(0.3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.launch.steps import TrainState
+    tree = TrainState(
+        params={"layers": {"w": jnp.arange(6.0).reshape(2, 3),
+                           "b": jnp.ones((3,), jnp.bfloat16)}},
+        opt={"m": {"layers": {"w": jnp.zeros((2, 3)),
+                              "b": jnp.zeros((3,))}}},
+        step=jnp.asarray(17, jnp.int32))
+    path = save_checkpoint(str(tmp_path), tree, step=17)
+    assert path.endswith("state.npz")
+    assert latest_step(str(tmp_path)) == 17
+    restored = restore_checkpoint(str(tmp_path), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_multiple_steps(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    save_checkpoint(str(tmp_path), tree, step=1)
+    save_checkpoint(str(tmp_path), {"x": jnp.ones((2,))}, step=5)
+    assert latest_step(str(tmp_path)) == 5
+    out = restore_checkpoint(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), [1.0, 1.0])

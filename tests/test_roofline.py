@@ -1,0 +1,79 @@
+"""Roofline machinery: HLO collective parser + three-term model."""
+
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline import analyze, collective_bytes, model_flops, \
+    parse_collectives
+
+SAMPLE_HLO = """
+HloModule jit_step
+%all-reduce.1 = f32[128,256]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+%ar.2 = (bf16[64]{0}, f32[32]{0}) all-reduce(%a, %b), channel_id=2
+%ag = bf16[8,1024]{1,0} all-gather(%y), dimensions={0}
+%agd = f32[8]{0} all-gather-done(%ag)
+%cp = f32[16,16]{1,0} collective-permute-start(%z)
+%a2a = f32[4,4]{1,0} all-to-all(%w)
+%rs = bf16[2048]{0} reduce-scatter(%v)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    out = parse_collectives(SAMPLE_HLO)
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-reduce"]["bytes"] == 128 * 256 * 4 + 64 * 2 + 32 * 4
+    assert out["all-gather"]["count"] == 1      # -done not double counted
+    assert out["all-gather"]["bytes"] == 8 * 1024 * 2
+    assert out["collective-permute"]["count"] == 1
+    assert out["all-to-all"]["bytes"] == 64
+    assert out["reduce-scatter"]["bytes"] == 4096
+    assert collective_bytes(SAMPLE_HLO) == sum(
+        v["bytes"] for v in out.values())
+
+
+def test_model_flops_dense_vs_moe():
+    dense = get_config("granite_3_8b")
+    moe = get_config("kimi_k2_1t_a32b")
+    train = INPUT_SHAPES["train_4k"]
+    # MoE: active params far below total
+    assert moe.n_active_params() < 0.1 * moe.n_params()
+    assert model_flops(moe, train) == 6.0 * moe.n_active_params() * \
+        train.global_batch * train.seq_len
+    assert model_flops(dense, train) == 6.0 * dense.n_params() * \
+        train.global_batch * train.seq_len
+    # decode: one token per sequence
+    dec = INPUT_SHAPES["decode_32k"]
+    assert model_flops(dense, dec) == 2.0 * dense.n_params() * \
+        dec.global_batch
+
+
+def test_param_counts_sane():
+    """Analytic parameter counts land near the nameplate sizes."""
+    approx = {
+        "kimi_k2_1t_a32b": (0.9e12, 1.3e12),
+        "arctic_480b": (3.5e11, 5.5e11),
+        "gemma2_2b": (1.8e9, 3.5e9),
+        "gemma2_9b": (7e9, 12e9),
+        "granite_3_8b": (6e9, 10e9),
+        "pixtral_12b": (1.0e13 * 0.001, 1.4e10),
+        "qwen2_72b": (6e10, 8.5e10),
+        "xlstm_125m": (0.8e8, 2.5e8),
+        "zamba2_2p7b": (2.0e9, 3.5e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, (arch, f"{n:.3e}")
+
+
+def test_analyze_dominant_term():
+    cfg = get_config("granite_3_8b")
+    shape = INPUT_SHAPES["train_4k"]
+    rep = analyze(cfg, shape, "16x16", 256,
+                  flops_per_device=1e15, bytes_per_device=1e11,
+                  coll_bytes_per_device=1e9, collectives={})
+    assert rep.dominant == "compute"
+    assert rep.compute_sec == pytest.approx(1e15 / 197e12)
+    rep2 = analyze(cfg, shape, "16x16", 256, 1e12, 1e12, 1e9, {})
+    assert rep2.dominant == "memory"
+    rep3 = analyze(cfg, shape, "16x16", 256, 1e12, 1e10, 1e12, {})
+    assert rep3.dominant == "collective"
