@@ -23,6 +23,7 @@ from repro.kernels.gossip_mix.ops import mix_matching
 from repro.kernels.gossip_mix.ref import mix_matching_ref
 from repro.kernels.lda_gibbs import ops as gibbs_ops
 from repro.kernels.lda_gibbs.ref import gibbs_sweeps_ref
+from repro.core import comm
 from repro.core.gossip import ring_matchings
 
 
@@ -61,13 +62,30 @@ def bench_gossip_mix(rows):
     n, k, v = 16, 5, 4096
     stats = jax.random.uniform(jax.random.key(0), (n, k, v))
     p = jnp.asarray(ring_matchings(n)[0])
-    kern = jax.jit(lambda s: mix_matching(s, p))
+    kern = jax.jit(lambda s: mix_matching(s, p, interpret=True))
     ref = jax.jit(lambda s: mix_matching_ref(s, p))
     t_k, out_k = timeit(kern, stats)
     t_r, out_r = timeit(ref, stats)
     assert float(jnp.abs(out_k - out_r).max()) < 1e-6
     rows.append(("gossip_mix_pallas_interp", t_k, f"oracle_us={t_r:.0f}"))
     rows.append(("gossip_mix_jnp_oracle", t_r, f"n={n};KV={k}x{v}"))
+
+
+def bench_comm_backends(rows):
+    """The same mix through the unified Communicator API (per-backend)."""
+    n, k, v = 16, 5, 4096
+    stats = jax.random.uniform(jax.random.key(0), (n, k, v))
+    p = ring_matchings(n)[0]
+    ref_out = None
+    for name in ("dense", "pallas", "mesh"):
+        c = comm.get_communicator(name)
+        t_us, out = timeit(lambda s: c.mix_matching(s, p), stats)
+        if ref_out is None:
+            ref_out = out
+        else:
+            assert float(jnp.abs(out - ref_out).max()) < 1e-6, name
+        by = c.bytes_per_round(stats.shape, 4, p)
+        rows.append((f"comm_{name}", t_us, f"bytes_per_round={by}"))
 
 
 def bench_flash_attention(rows):
@@ -95,6 +113,7 @@ def main(argv=None):
     rows = []
     bench_lda_gibbs(rows)
     bench_gossip_mix(rows)
+    bench_comm_backends(rows)
     bench_flash_attention(rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -59,7 +59,7 @@ def main(argv=None):
     print("gossip vs all-reduce collective bytes (model)")
     print("=" * 72)
     from benchmarks import gossip_collectives
-    gossip_collectives.main([])
+    gossip_collectives.main(["--arch-table"])
     sections.append("gossip_collectives")
 
     print("=" * 72)

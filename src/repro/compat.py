@@ -1,0 +1,52 @@
+"""Version-compat shims for the jax API surface this repo targets.
+
+The code is written against recent jax (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``) but must
+also run on jax 0.4.x, where shard_map still lives in ``jax.experimental``
+and meshes have no axis types. Import the symbols from here instead of
+branching at every call site.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+try:
+    from jax.sharding import AxisType
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # jax < 0.6
+    AxisType = None  # type: ignore[assignment]
+    HAS_AXIS_TYPES = False
+
+
+def auto_axis_types(n_axes: int):
+    """(AxisType.Auto,) * n_axes, or None where axis types don't exist."""
+    if HAS_AXIS_TYPES:
+        return (AxisType.Auto,) * n_axes
+    return None
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """AbstractMesh across the 0.4.x (pair-tuple) / 0.6+ signatures."""
+    from jax.sharding import AbstractMesh
+
+    if HAS_AXIS_TYPES:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names),
+                            axis_types=auto_axis_types(len(axis_names)))
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates axis_types on old jax (ignored there)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES and axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

@@ -1,0 +1,407 @@
+"""Unified gossip communication layer: one schedule object, three backends.
+
+The paper's core move — replace global aggregation of the [K, V] sufficient
+statistic with pairwise gossip averaging — used to be implemented three
+separate times in this repo (single-edge jnp mixing inside ``run_deleda``'s
+scan, an all_gather-then-select in the mesh launcher, and the scalar-prefetch
+Pallas kernel that nothing called). This module is the single abstraction
+they all now share:
+
+* :class:`GossipSchedule` — a pre-drawn sequence of gossip events, either
+  single activated edges (the paper's asynchronous Algorithm 1) or maximal
+  matchings (the synchronous multi-edge rounds every SPMD substrate wants).
+  Drawn host-side with numpy so a whole trajectory stays reproducible and
+  foldable into one ``lax.scan``.
+
+* :class:`Communicator` — the protocol ``mix_matching(stats, partners)`` /
+  ``mix_edge(stats, i, j)`` with three interchangeable backends:
+
+  - :class:`DenseSimComm`   pure-jnp oracle (node axis is a real array axis)
+  - :class:`PallasSimComm`  the kernels/gossip_mix scalar-prefetch kernel
+  - :class:`MeshComm`       ppermute pair exchanges over a device mesh axis;
+    documents physically never leave their device (the privacy placement),
+    and one matching round moves one local statistics block per device —
+    O(K*V) bytes, not the O(n*K*V) of the old all_gather hack.
+
+Statistics enter the consensus linearly (exactly the property exploited by
+Campbell & How's approximate decentralized Bayes and by Cyffers & Bellet's
+privacy amplification), so all three backends compute the *same* averaging
+map and are asserted equivalent in tests/test_comm.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import gossip
+from repro.core.graph import Graph
+
+__all__ = [
+    "GossipSchedule", "Communicator", "DenseSimComm", "PallasSimComm",
+    "MeshComm", "get_communicator", "mesh_round", "SIM_BACKENDS",
+]
+
+# One gossip round over a mesh axis, usable *inside* shard_map (this is the
+# primitive sync_tree_mesh's hypercube/ring wrappers are built on).
+mesh_round = gossip.gossip_round_mesh
+
+EDGE = "edge"
+MATCHING = "matching"
+
+
+# ----------------------------------------------------------------------------
+# Schedules
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GossipSchedule:
+    """A pre-drawn gossip trajectory as one first-class object.
+
+    ``kind == "edge"``:     data is [T, 2] int32 activated edges.
+    ``kind == "matching"``: data is [T, n] int32 partner vectors
+                            (involutions: p[p[i]] == i, self-partner = idle).
+    """
+
+    kind: str
+    data: np.ndarray
+    n_nodes: int
+
+    def __post_init__(self):
+        d = np.asarray(self.data, np.int32)
+        if self.kind == EDGE:
+            if d.ndim != 2 or d.shape[1] != 2:
+                raise ValueError(f"edge schedule must be [T, 2], {d.shape}")
+        elif self.kind == MATCHING:
+            if d.ndim != 2 or d.shape[1] != self.n_nodes:
+                raise ValueError(
+                    f"matching schedule must be [T, {self.n_nodes}], "
+                    f"got {d.shape}")
+            if not (d[np.arange(len(d))[:, None], d]
+                    == np.arange(self.n_nodes)).all():
+                raise ValueError("matching rows must be involutions")
+        else:
+            raise ValueError(f"kind must be edge|matching, {self.kind!r}")
+        if len(d) and (d.min() < 0 or d.max() >= self.n_nodes):
+            raise ValueError("schedule references node out of range")
+        object.__setattr__(self, "data", d)
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.data)
+
+    # -- constructors --------------------------------------------------------
+
+    @staticmethod
+    def draw_edges(graph: Graph, n_rounds: int,
+                   rng: np.random.Generator) -> "GossipSchedule":
+        """One uniformly-random activated edge per round (Algorithm 1)."""
+        return GossipSchedule(
+            EDGE, gossip.draw_edge_schedule(graph, n_rounds, rng),
+            graph.n_nodes)
+
+    @staticmethod
+    def draw_matchings(graph: Graph, n_rounds: int,
+                       rng: np.random.Generator) -> "GossipSchedule":
+        """One random maximal matching per round (synchronous rounds)."""
+        return GossipSchedule(
+            MATCHING, gossip.draw_matching_schedule(graph, n_rounds, rng),
+            graph.n_nodes)
+
+    @staticmethod
+    def hypercube(n: int) -> "GossipSchedule":
+        """log2(n) XOR-partner rounds — exact consensus when run in full."""
+        return GossipSchedule(MATCHING, gossip.hypercube_partners(n), n)
+
+    @staticmethod
+    def ring(n: int, n_rounds: int = 2) -> "GossipSchedule":
+        """Alternating even/odd ring matchings, tiled to n_rounds."""
+        base = gossip.ring_matchings(n)
+        idx = np.arange(n_rounds) % len(base)
+        return GossipSchedule(MATCHING, base[idx], n)
+
+    # -- conversions ---------------------------------------------------------
+
+    def as_matchings(self) -> "GossipSchedule":
+        """View an edge schedule as one-pair-per-round matchings.
+
+        This is the bridge between the paper's asynchronous single-edge
+        process and the synchronous multi-edge substrates: a round that
+        matches exactly the activated pair applies the identical averaging
+        matrix W_e, so a matching backend replays an edge schedule exactly.
+        """
+        if self.kind == MATCHING:
+            return self
+        t = self.n_rounds
+        p = np.broadcast_to(np.arange(self.n_nodes, dtype=np.int32),
+                            (t, self.n_nodes)).copy()
+        rows = np.arange(t)
+        p[rows, self.data[:, 0]] = self.data[:, 1]
+        p[rows, self.data[:, 1]] = self.data[:, 0]
+        return GossipSchedule(MATCHING, p, self.n_nodes)
+
+    def partners(self) -> np.ndarray:
+        """[T, n] partner matrix (converting edges if necessary)."""
+        return self.as_matchings().data
+
+
+# ----------------------------------------------------------------------------
+# Communicator protocol + simulation backends
+# ----------------------------------------------------------------------------
+
+@runtime_checkable
+class Communicator(Protocol):
+    """Applies gossip averaging rounds to node-stacked statistics [n, ...]."""
+
+    name: str
+
+    def mix_matching(self, stats: jax.Array, partners) -> jax.Array:
+        """s_i <- (s_i + s_{p[i]})/2 for a whole matching at once."""
+        ...
+
+    def mix_edge(self, stats: jax.Array, i, j) -> jax.Array:
+        """s_i, s_j <- (s_i + s_j)/2 for one activated edge."""
+        ...
+
+    def bytes_per_round(self, stats_shape, itemsize: int,
+                        partners: np.ndarray) -> int:
+        """Total bytes on the wire for one matching round (cost model)."""
+        ...
+
+
+def _pair_payload_bytes(stats_shape, itemsize: int) -> int:
+    return int(np.prod(stats_shape[1:])) * itemsize
+
+
+def _n_matched(partners: np.ndarray) -> int:
+    partners = np.asarray(partners)
+    return int((partners != np.arange(len(partners))).sum())
+
+
+class DenseSimComm:
+    """Pure-jnp oracle: the node axis is a real array axis on one device."""
+
+    name = "dense"
+
+    def mix_matching(self, stats, partners):
+        return gossip.mix_matching(stats, jnp.asarray(partners,
+                                                      jnp.int32))
+
+    def mix_edge(self, stats, i, j):
+        return gossip.mix_edge(stats, i, j)
+
+    def bytes_per_round(self, stats_shape, itemsize, partners):
+        # a physical deployment sends each matched node's block both ways
+        return _n_matched(partners) * _pair_payload_bytes(stats_shape,
+                                                          itemsize)
+
+
+class PallasSimComm:
+    """Routes mixing through the kernels/gossip_mix scalar-prefetch kernel.
+
+    Requires [n, K, V]-shaped statistics (the kernel streams [1, K, V_blk]
+    tiles). ``interpret=None`` auto-detects: compiled on TPU, interpreter
+    elsewhere — see kernels/gossip_mix/ops.py.
+    """
+
+    name = "pallas"
+
+    def __init__(self, block_v: int = 512, interpret: bool | None = None):
+        self.block_v = block_v
+        self.interpret = interpret
+
+    def mix_matching(self, stats, partners):
+        from repro.kernels.gossip_mix import ops as gossip_mix_ops
+        return gossip_mix_ops.mix_matching(
+            stats, jnp.asarray(partners, jnp.int32),
+            block_v=self.block_v, interpret=self.interpret)
+
+    def mix_edge(self, stats, i, j):
+        n = stats.shape[0]
+        p = jnp.arange(n, dtype=jnp.int32)
+        p = p.at[i].set(jnp.asarray(j, jnp.int32))
+        p = p.at[j].set(jnp.asarray(i, jnp.int32))
+        return self.mix_matching(stats, p)
+
+    def bytes_per_round(self, stats_shape, itemsize, partners):
+        return _n_matched(partners) * _pair_payload_bytes(stats_shape,
+                                                          itemsize)
+
+
+# ----------------------------------------------------------------------------
+# Mesh backend: ppermute pair exchanges over a named axis
+# ----------------------------------------------------------------------------
+
+def _route_matching(partners: np.ndarray, n_dev: int):
+    """Decompose one matching into intra-device mixing + ppermute passes.
+
+    Nodes are block-contiguous over the axis: device d owns rows
+    [d*n_local, (d+1)*n_local). Cross-device pairs are greedily colored into
+    *device-level matchings* ("passes"); each pass is one bidirectional
+    ppermute of the full local block plus a per-node row-gather from the
+    received block. With one node per device every matching is a single
+    pass — one [K, V] block per device per round.
+
+    Returns ((intra_src, intra_active), [(perm, remote_src, active), ...])
+    where intra_src/remote_src are [n] local-row gather indices and perm is
+    the static (src, dst) device permutation of the pass.
+    """
+    partners = np.asarray(partners)
+    n = len(partners)
+    if n % n_dev:
+        raise ValueError(f"n={n} not divisible by n_dev={n_dev}")
+    n_local = n // n_dev
+
+    intra_src = (np.arange(n, dtype=np.int32) % n_local)
+    intra_active = np.zeros(n, bool)
+    cross: list[tuple[int, int]] = []
+    for i in range(n):
+        j = int(partners[i])
+        if j <= i:
+            continue
+        if i // n_local == j // n_local:
+            intra_src[i] = j % n_local
+            intra_src[j] = i % n_local
+            intra_active[i] = intra_active[j] = True
+        else:
+            cross.append((i, j))
+
+    passes = []      # [{devmap: {a: b}, nodes: [(i, j)]}]
+    for i, j in cross:
+        a, b = i // n_local, j // n_local
+        for ps in passes:
+            pa, pb = ps["devmap"].get(a), ps["devmap"].get(b)
+            if (pa is None and pb is None) or (pa == b and pb == a):
+                ps["devmap"][a] = b
+                ps["devmap"][b] = a
+                ps["nodes"].append((i, j))
+                break
+        else:
+            passes.append({"devmap": {a: b, b: a}, "nodes": [(i, j)]})
+
+    routed = []
+    for ps in passes:
+        perm = tuple(sorted(ps["devmap"].items()))
+        remote_src = (np.arange(n, dtype=np.int32) % n_local)
+        active = np.zeros(n, bool)
+        for i, j in ps["nodes"]:
+            remote_src[i] = j % n_local
+            remote_src[j] = i % n_local
+            active[i] = active[j] = True
+        routed.append((perm, remote_src, active))
+    return (intra_src, intra_active), routed
+
+
+class MeshComm:
+    """Gossip over a device mesh axis via pairwise ``ppermute`` exchanges.
+
+    Host-level interface over globally-shaped [n, ...] arrays sharded on the
+    leading (node) axis: ``mix_matching`` routes the matching as intra-device
+    row mixes plus one-hop ppermute passes (see :func:`_route_matching`).
+    The routing is host-static (schedules are pre-drawn), so each distinct
+    device-permutation compiles once and is cached; the per-node gather
+    indices stay traced, so two rounds sharing a device permutation share a
+    compilation.
+
+    For code already *inside* shard_map, use :func:`mesh_round` directly.
+    """
+
+    name = "mesh"
+
+    def __init__(self, mesh=None, axis_name: str = "data"):
+        if mesh is None:
+            n = len(jax.devices())
+            mesh = compat.make_mesh((n,), (axis_name,),
+                                    axis_types=compat.auto_axis_types(1))
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.n_devices = int(dict(mesh.shape)[axis_name])
+        self._pass_fns: dict[tuple, object] = {}
+        self._local_fn = None
+
+    # -- jitted building blocks ---------------------------------------------
+
+    def _node_spec(self):
+        return P(self.axis_name)
+
+    def _get_local_fn(self):
+        if self._local_fn is None:
+            node = self._node_spec()
+
+            def local_mix(stats, src, active):
+                mixed = 0.5 * (stats + stats[src])
+                keep = active.reshape((-1,) + (1,) * (stats.ndim - 1))
+                return jnp.where(keep, mixed, stats)
+
+            self._local_fn = jax.jit(compat.shard_map(
+                local_mix, mesh=self.mesh,
+                in_specs=(node, node, node), out_specs=node))
+        return self._local_fn
+
+    def _get_pass_fn(self, perm: tuple):
+        fn = self._pass_fns.get(perm)
+        if fn is None:
+            node = self._node_spec()
+            axis = self.axis_name
+            perm_list = list(perm)
+
+            def exchange(stats, src, active):
+                other = jax.lax.ppermute(stats, axis, perm_list)
+                mixed = 0.5 * (stats + other[src])
+                keep = active.reshape((-1,) + (1,) * (stats.ndim - 1))
+                return jnp.where(keep, mixed, stats)
+
+            fn = jax.jit(compat.shard_map(
+                exchange, mesh=self.mesh,
+                in_specs=(node, node, node), out_specs=node))
+            self._pass_fns[perm] = fn
+        return fn
+
+    # -- Communicator interface ---------------------------------------------
+
+    def mix_matching(self, stats, partners):
+        partners = np.asarray(partners, np.int32)
+        (intra_src, intra_active), passes = _route_matching(
+            partners, self.n_devices)
+        if intra_active.any():
+            stats = self._get_local_fn()(
+                stats, jnp.asarray(intra_src), jnp.asarray(intra_active))
+        for perm, remote_src, active in passes:
+            stats = self._get_pass_fn(perm)(
+                stats, jnp.asarray(remote_src), jnp.asarray(active))
+        return stats
+
+    def mix_edge(self, stats, i, j):
+        # host-level routing: i, j must be concrete (schedules are pre-drawn)
+        n = stats.shape[0]
+        p = np.arange(n, dtype=np.int32)
+        p[int(i)], p[int(j)] = int(j), int(i)
+        return self.mix_matching(stats, p)
+
+    def bytes_per_round(self, stats_shape, itemsize, partners):
+        # each ppermute pass moves the full local block per involved device
+        _, passes = _route_matching(np.asarray(partners), self.n_devices)
+        n_local = stats_shape[0] // self.n_devices
+        block = n_local * _pair_payload_bytes(stats_shape, itemsize)
+        return sum(len(perm) * block for perm, _, _ in passes)
+
+
+SIM_BACKENDS = ("dense", "pallas")
+
+
+def get_communicator(name: str, **kwargs) -> Communicator:
+    """Factory: 'dense' | 'pallas' | 'mesh' (kwargs go to the backend)."""
+    if name == "dense":
+        return DenseSimComm(**kwargs)
+    if name == "pallas":
+        return PallasSimComm(**kwargs)
+    if name == "mesh":
+        return MeshComm(**kwargs)
+    raise ValueError(f"unknown communicator backend {name!r}; "
+                     f"want dense | pallas | mesh")

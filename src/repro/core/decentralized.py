@@ -17,9 +17,13 @@ k < 2(n-1)/n... i.e. k=1 — but the real win is *latency/straggler*
 decoupling and partial synchrony: consensus error decays as lambda2^{k/2}
 per step and the optimizer tolerates it (exactly the paper's argument).
 
-Two substrates, same semantics:
-  * `sync_tree_mesh`   — inside shard_map, over named mesh axes (TPU).
-  * `sync_tree_sim`    — stacked leading node axis (CPU simulation / tests).
+Both substrates are thin wrappers over the unified ``repro.core.comm``
+layer — the same schedules (`GossipSchedule.hypercube` / `.ring`) and the
+same mixing backends the LDA reproduction uses:
+  * `sync_tree_mesh`   — inside shard_map, over named mesh axes (TPU);
+                         rounds are `comm.mesh_round` ppermute exchanges.
+  * `sync_tree_sim`    — stacked leading node axis (CPU simulation /
+                         tests); rounds go through a sim `Communicator`.
 """
 
 from __future__ import annotations
@@ -32,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gossip
+from repro.core import comm as comm_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +67,34 @@ def parse_sync(spec: str) -> SyncSpec:
     return SyncSpec(kind=kind, rounds=rounds)
 
 
+def rounds_per_axis(spec: SyncSpec, axis_sizes: Sequence[int]) -> list[int]:
+    """How many gossip rounds each axis runs under the spec's TOTAL budget.
+
+    ``spec.rounds`` is a budget over ALL axes, spent in axis order:
+    hypercube axes take up to their exact count (log2 size), ring axes take
+    the whole remaining budget (or the nominal 2 even/odd rounds when the
+    budget is unlimited). This is the single source of truth shared by
+    sync_tree_mesh, sync_tree_sim and collective_bytes_per_sync — the mesh
+    path used to skip decrementing the budget for ring rounds, silently
+    over-spending on multi-axis specs.
+    """
+    out: list[int] = []
+    budget = spec.rounds
+    for size in axis_sizes:
+        if spec.kind == "allreduce" or int(size) <= 1 or budget == 0:
+            out.append(0)
+            continue
+        if spec.kind == "hypercube":
+            exact = int(size).bit_length() - 1
+            k = exact if budget is None else min(budget, exact)
+        else:  # ring
+            k = 2 if budget is None else budget
+        out.append(k)
+        if budget is not None:
+            budget -= k
+    return out
+
+
 # ----------------------------------------------------------------------------
 # Mesh substrate (inside shard_map)
 # ----------------------------------------------------------------------------
@@ -79,21 +111,16 @@ def sync_tree_mesh(tree, spec: SyncSpec, axis_names: Sequence[str],
         return jax.tree.map(
             lambda x: jax.lax.pmean(x, tuple(axis_names)), tree)
 
-    budget = spec.rounds
-    for name, size in zip(axis_names, axis_sizes):
-        if size == 1:
+    for name, size, k in zip(axis_names, axis_sizes,
+                             rounds_per_axis(spec, axis_sizes)):
+        if k == 0:
             continue
-        if spec.kind == "hypercube":
-            exact = int(size).bit_length() - 1
-            k = exact if budget is None else min(budget, exact)
-            tree = gossip.gossip_hypercube_mesh(tree, name, size, k)
-            if budget is not None:
-                budget -= k
-                if budget <= 0:
-                    break
-        else:  # ring
-            k = 2 if budget is None else budget
-            tree = gossip.gossip_ring_mesh(tree, name, size, k)
+        schedule = (comm_mod.GossipSchedule.hypercube(int(size))
+                    if spec.kind == "hypercube"
+                    else comm_mod.GossipSchedule.ring(int(size), k))
+        for r in range(k):
+            tree = comm_mod.mesh_round(
+                tree, schedule.data[r % schedule.n_rounds], name)
     return tree
 
 
@@ -117,42 +144,35 @@ def collective_bytes_per_sync(spec: SyncSpec, payload_bytes: int,
     n = int(np.prod(axis_sizes))
     if spec.kind == "allreduce":
         return int(2 * payload_bytes * (n - 1) / n)
-    if spec.kind == "hypercube":
-        exact = sum(int(s).bit_length() - 1 for s in axis_sizes if s > 1)
-        k = exact if spec.rounds is None else min(spec.rounds, exact)
-        return payload_bytes * k
-    k = 2 if spec.rounds is None else spec.rounds
-    return payload_bytes * k
+    return payload_bytes * sum(rounds_per_axis(spec, axis_sizes))
 
 
 # ----------------------------------------------------------------------------
 # Simulation substrate (stacked node axis; tests + CPU experiments)
 # ----------------------------------------------------------------------------
 
-def sync_tree_sim(tree, spec: SyncSpec, n_nodes: int):
+def sync_tree_sim(tree, spec: SyncSpec, n_nodes: int,
+                  comm: comm_mod.Communicator | None = None):
     """Synchronize a pytree whose every leaf has leading axis [n_nodes, ...].
 
     Semantics match sync_tree_mesh with a single axis of size n_nodes.
+    Rounds are applied through a simulation `Communicator` (pure-jnp dense
+    by default; pass comm=PallasSimComm(...) to route [n, K, V] leaves
+    through the gossip_mix kernel).
     """
     if spec.kind == "allreduce":
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x.mean(0, keepdims=True), x.shape),
             tree)
 
-    if spec.kind == "hypercube":
-        partners = gossip.hypercube_partners(n_nodes)
-        exact = len(partners)
-        k = exact if spec.rounds is None else min(spec.rounds, exact)
-        for r in range(k):
-            p = jnp.asarray(partners[r])
-            tree = jax.tree.map(lambda x: gossip.mix_matching(x, p), tree)
-        return tree
-
-    rounds = gossip.ring_matchings(n_nodes)
-    k = 2 if spec.rounds is None else spec.rounds
+    comm = comm or comm_mod.DenseSimComm()
+    (k,) = rounds_per_axis(spec, (n_nodes,))
+    schedule = (comm_mod.GossipSchedule.hypercube(n_nodes)
+                if spec.kind == "hypercube"
+                else comm_mod.GossipSchedule.ring(n_nodes, max(k, 1)))
     for r in range(k):
-        p = jnp.asarray(rounds[r % 2])
-        tree = jax.tree.map(lambda x: gossip.mix_matching(x, p), tree)
+        p = jnp.asarray(schedule.data[r % schedule.n_rounds])
+        tree = jax.tree.map(lambda x: comm.mix_matching(x, p), tree)
     return tree
 
 

@@ -3,10 +3,14 @@
 n agents sit on an undirected graph; each holds a private shard of documents
 and a local sufficient-statistics iterate s_i (shape [K, V]). Per iteration:
 
-  1. one edge (i, j) ~ Uniform(E) activates; s_i, s_j <- (s_i + s_j)/2;
+  1. a gossip event mixes statistics: either ONE edge (i, j) ~ Uniform(E)
+     activates (the paper's Algorithm 1) or a whole random maximal MATCHING
+     fires at once (the synchronous multi-edge round — one round mixes ~n/2
+     pairs, so paper-scale n=50 doesn't need n x more scan steps);
   2. *synchronous*: EVERY node performs a local G-OEM update (eq. 2) on a
      minibatch of its own documents;
-     *asynchronous*: only the two awake nodes i, j update.
+     *asynchronous*: only the awake nodes update (the activated pair for an
+     edge event; every matched node for a matching round).
 
 The asynchronous variant keeps per-node iteration counters (each node's
 step size rho_{t_i} advances only when that node updates) and optionally the
@@ -15,9 +19,16 @@ wakes with probability deg(i)/|E|, so its updates are reweighted by
 mean_degree/deg(i) to keep the network optimizing the *uniform* objective on
 irregular graphs.
 
-The whole trajectory (edge schedule pre-drawn host-side) folds into a single
+Gossip mixing goes through the unified :mod:`repro.core.comm` layer
+(``DeledaConfig.comm_backend``): the pure-jnp oracle or the gossip_mix
+Pallas kernel, interchangeable and test-asserted equivalent. Per-node PRNG
+streams are derived by ``fold_in(key, node_id)``, which makes an edge
+schedule and its one-pair-per-round matching view produce bit-identical
+trajectories (tests/test_comm.py).
+
+The whole trajectory (schedule pre-drawn host-side) folds into a single
 ``lax.scan`` — one jit compilation, reproducible, and the natural shape for
-the TPU-mesh variant (core/decentralized.py).
+the TPU-mesh variant (launch/gossip_sim.py, core/decentralized.py).
 """
 
 from __future__ import annotations
@@ -30,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import comm as comm_mod
 from repro.core import gibbs as gibbs_mod
 from repro.core import gossip
 from repro.core.graph import Graph
@@ -49,10 +61,17 @@ class DeledaConfig:
     rho_t0: float = 10.0
     degree_correction: bool = True   # Remark 1 ([4]) reweighting, async only
     use_pallas: bool = False         # E-step via the lda_gibbs TPU kernel
+    comm_backend: str = "dense"      # gossip mixing: "dense" | "pallas"
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {self.mode!r}")
+        if self.comm_backend not in comm_mod.SIM_BACKENDS:
+            raise ValueError(
+                f"comm_backend must be one of {comm_mod.SIM_BACKENDS} "
+                f"inside the simulation substrate, got "
+                f"{self.comm_backend!r} (the mesh backend lives in "
+                f"launch/gossip_sim.py)")
 
 
 class DeledaTrace(NamedTuple):
@@ -84,20 +103,47 @@ def _local_update(config: DeledaConfig, stats, step, key, words, mask,
     return (1.0 - rho) * stats + rho * result.stats, t
 
 
-@partial(jax.jit, static_argnames=("config", "n_steps", "record_every"))
+def _resolve_schedule_kind(schedule: jax.Array, n: int, kind: str) -> str:
+    """'auto': [T, 2] is an edge list, [T, n] a matching partner matrix.
+
+    For n == 2 both shapes coincide; 'auto' reads it as edges there (pass
+    schedule_kind='matching' explicitly for 2-node matching schedules).
+    """
+    if kind in ("edge", "matching"):
+        return kind
+    if kind != "auto":
+        raise ValueError(f"schedule_kind must be auto|edge|matching, "
+                         f"got {kind!r}")
+    if schedule.ndim != 2:
+        raise ValueError(f"schedule must be [T, 2] or [T, n], "
+                         f"got shape {schedule.shape}")
+    if schedule.shape[1] == 2:
+        return "edge"
+    if schedule.shape[1] == n:
+        return "matching"
+    raise ValueError(f"schedule shape {schedule.shape} matches neither "
+                     f"[T, 2] edges nor [T, {n}] matchings")
+
+
+@partial(jax.jit, static_argnames=("config", "n_steps", "record_every",
+                                   "schedule_kind"))
 def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
-               mask: jax.Array, edges: jax.Array, degrees: jax.Array,
-               n_steps: int, record_every: int = 10) -> DeledaTrace:
+               mask: jax.Array, schedule: jax.Array, degrees: jax.Array,
+               n_steps: int, record_every: int = 10,
+               schedule_kind: str = "auto") -> DeledaTrace:
     """Run DELEDA for `n_steps` gossip iterations.
 
     words: [n, D, L] int32 private documents per node; mask: [n, D, L] bool;
-    edges: [n_steps, 2] int32 pre-drawn activation schedule
-    (gossip.draw_edge_schedule); degrees: [n] int32 node degrees (for the
-    async degree correction).
+    schedule: [n_steps, 2] int32 pre-drawn edge activations
+    (gossip.draw_edge_schedule) OR [n_steps, n] int32 matching partner
+    vectors (gossip.draw_matching_schedule / comm.GossipSchedule.partners);
+    degrees: [n] int32 node degrees (for the async degree correction).
     """
     if n_steps % record_every != 0:
         raise ValueError("n_steps must be divisible by record_every")
     n, d, l = words.shape
+    kind = _resolve_schedule_kind(schedule, n, schedule_kind)
+    comm = comm_mod.get_communicator(config.comm_backend)
     rho_fn = make_rho_schedule(config.rho_kind, kappa=config.rho_kappa,
                                t0=config.rho_t0)
 
@@ -105,9 +151,15 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     stats0 = jax.vmap(lambda k: init_stats(config.lda, k))(
         jax.random.split(k_init, n))                    # [n, K, V]
     steps0 = jnp.zeros((n,), jnp.int32)
+    node_ids = jnp.arange(n, dtype=jnp.int32)
 
+    # Remark 1 reweighting models SINGLE-EDGE activation, where node i wakes
+    # with probability deg(i)/|E|. Under random maximal matching rounds wake
+    # rates are near-uniform in the degree, so the correction would skew the
+    # objective instead of fixing it — it only applies to edge schedules.
     mean_deg = degrees.astype(jnp.float32).mean()
-    if config.degree_correction and config.mode == "async":
+    if (config.degree_correction and config.mode == "async"
+            and kind == "edge"):
         corr = mean_deg / jnp.maximum(degrees.astype(jnp.float32), 1.0)  # [n]
     else:
         corr = jnp.ones((n,), jnp.float32)
@@ -116,60 +168,92 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
         idx = jax.random.randint(k, (config.batch_size,), 0, d)
         return node_words[idx], node_mask[idx]
 
+    def update_rows(stats_rows, steps_rows, ids, k_sel, k_gibbs,
+                    words_rows, mask_rows, corr_rows):
+        """Vmapped local updates for a set of node rows.
+
+        Per-node streams come from fold_in(key, GLOBAL node id), so the
+        same node sees the same stream regardless of which/how many nodes
+        are updated alongside it — the property that makes edge schedules
+        and their 1-pair matching views bit-identical.
+        """
+        def one(s, t, i, w_, m_, c):
+            bw, bm = sample_batch(jax.random.fold_in(k_sel, i), w_, m_)
+            return _local_update(config, s, t,
+                                 jax.random.fold_in(k_gibbs, i), bw, bm,
+                                 rho_fn, c)
+        return jax.vmap(one)(stats_rows, steps_rows, ids, words_rows,
+                             mask_rows, corr_rows)
+
     def iteration(carry, inp):
         stats, steps = carry
-        edge, k = inp
-        i, j = edge[0], edge[1]
-
-        # -- gossip averaging step (Algorithm 1, line 4)
-        stats = gossip.mix_edge(stats, i, j)
-
+        event, k = inp
         k_sel, k_gibbs = jax.random.split(k)
 
-        if config.mode == "sync":
-            # -- every node updates locally (Algorithm 1, lines 5-7)
-            bw, bm = jax.vmap(sample_batch)(
-                jax.random.split(k_sel, n), words, mask)
-            new_stats, new_steps = jax.vmap(
-                _local_update, in_axes=(None, 0, 0, 0, 0, 0, None, 0)
-            )(config, stats, steps, jax.random.split(k_gibbs, n),
-              bw, bm, rho_fn, corr)
-            stats, steps = new_stats, new_steps
+        if kind == "edge":
+            i, j = event[0], event[1]
+            # -- gossip averaging step (Algorithm 1, line 4)
+            stats = comm.mix_edge(stats, i, j)
+            if config.mode == "sync":
+                # -- every node updates locally (Algorithm 1, lines 5-7)
+                stats, steps = update_rows(stats, steps, node_ids, k_sel,
+                                           k_gibbs, words, mask, corr)
+            else:
+                # -- only the two awake nodes update (async variant)
+                active = jnp.stack([i, j])                    # [2]
+                up_stats, up_steps = update_rows(
+                    stats[active], steps[active], active, k_sel, k_gibbs,
+                    words[active], mask[active], corr[active])
+                stats = stats.at[active].set(up_stats)
+                steps = steps.at[active].set(up_steps)
         else:
-            # -- only the two awake nodes update (async variant)
-            active = jnp.stack([i, j])                         # [2]
-            bw, bm = jax.vmap(sample_batch)(
-                jax.random.split(k_sel, 2), words[active], mask[active])
-            up_stats, up_steps = jax.vmap(
-                _local_update, in_axes=(None, 0, 0, 0, 0, 0, None, 0)
-            )(config, stats[active], steps[active],
-              jax.random.split(k_gibbs, 2), bw, bm, rho_fn, corr[active])
-            stats = stats.at[active].set(up_stats)
-            steps = steps.at[active].set(up_steps)
+            partners = event                                  # [n]
+            stats = comm.mix_matching(stats, partners)
+            new_stats, new_steps = update_rows(stats, steps, node_ids,
+                                               k_sel, k_gibbs, words,
+                                               mask, corr)
+            if config.mode == "sync":
+                stats, steps = new_stats, new_steps
+            else:
+                # matched nodes are the awake ones this round
+                awake = partners != node_ids                  # [n]
+                stats = jnp.where(awake[:, None, None], new_stats, stats)
+                steps = jnp.where(awake, new_steps, steps)
 
         return (stats, steps), None
 
     def record_block(carry, inp):
-        edge_block, key_block = inp
-        carry, _ = jax.lax.scan(iteration, carry, (edge_block, key_block))
+        event_block, key_block = inp
+        carry, _ = jax.lax.scan(iteration, carry, (event_block, key_block))
         stats, _steps = carry
         return carry, (stats, gossip.consensus_distance(stats))
 
     n_rec = n_steps // record_every
     keys = jax.random.split(k_run, n_steps).reshape(n_rec, record_every)
-    edge_blocks = edges.reshape(n_rec, record_every, 2)
+    event_blocks = schedule.reshape(n_rec, record_every,
+                                    schedule.shape[-1])
     (stats, steps), (history, consensus) = jax.lax.scan(
-        record_block, (stats0, steps0), (edge_blocks, keys))
+        record_block, (stats0, steps0), (event_blocks, keys))
     return DeledaTrace(stats=stats, steps=steps, history=history,
                        consensus=consensus)
 
 
-def make_run_inputs(graph: Graph, n_steps: int, seed: int = 0
-                    ) -> tuple[jax.Array, jax.Array]:
-    """Convenience: (edges [T,2], degrees [n]) device arrays for run_deleda."""
+def make_run_inputs(graph: Graph, n_steps: int, seed: int = 0,
+                    kind: str = "edge") -> tuple[jax.Array, jax.Array]:
+    """Convenience: (schedule, degrees [n]) device arrays for run_deleda.
+
+    kind="edge" draws [T, 2] single-edge activations (Algorithm 1);
+    kind="matching" draws [T, n] random maximal matching rounds.
+    """
     rng = np.random.default_rng(seed)
-    edges = gossip.draw_edge_schedule(graph, n_steps, rng)
-    return jnp.asarray(edges), jnp.asarray(graph.degrees.astype(np.int32))
+    if kind == "edge":
+        sched = comm_mod.GossipSchedule.draw_edges(graph, n_steps, rng)
+    elif kind == "matching":
+        sched = comm_mod.GossipSchedule.draw_matchings(graph, n_steps, rng)
+    else:
+        raise ValueError(f"kind must be edge|matching, got {kind!r}")
+    return (jnp.asarray(sched.data),
+            jnp.asarray(graph.degrees.astype(np.int32)))
 
 
 # ----------------------------------------------------------------------------

@@ -30,7 +30,7 @@ def _mix_kernel(partners_ref, own_ref, partner_ref, out_ref):
 
 
 def mix_matching_pallas(stats: jax.Array, partners: jax.Array, *,
-                        block_v: int = 512, interpret: bool = True
+                        block_v: int = 512, interpret: bool = False
                         ) -> jax.Array:
     """stats [n, K, V] f32, partners [n] int32 -> mixed [n, K, V].
 

@@ -18,9 +18,23 @@ def _v_block(v: int, requested: int) -> int:
     return v
 
 
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> auto: compile on TPU, interpreter everywhere else.
+
+    The kernel is Mosaic-lowered TPU code; off-TPU the interpreter is the
+    only thing that can run it, but defaulting to interpret=True
+    unconditionally (the old behavior) silently kept the kernel OFF real
+    hardware. Tests pass an explicit value to pin the mode.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
 @partial(jax.jit, static_argnames=("block_v", "interpret"))
 def mix_matching(stats: jax.Array, partners: jax.Array,
-                 block_v: int = 512, interpret: bool = True) -> jax.Array:
+                 block_v: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
     """Kernel-backed matching mix; accepts any V (auto block size).
 
     Drop-in for `repro.core.gossip.mix_matching`.
@@ -28,4 +42,5 @@ def mix_matching(stats: jax.Array, partners: jax.Array,
     n, k, v = stats.shape
     bv = _v_block(v, block_v)
     return mix_matching_pallas(stats, partners.astype(jnp.int32),
-                               block_v=bv, interpret=interpret)
+                               block_v=bv,
+                               interpret=resolve_interpret(interpret))

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config, list_archs
 from repro.core import decentralized as dec
 from repro.launch.mesh import make_production_mesh
@@ -57,8 +58,8 @@ def measure(arch: str, out_path: str | None = None) -> dict:
         def sync(tree):
             return dec.sync_tree_mesh(tree, spec, ("data",), (n_data,))
 
-        shmap = jax.shard_map(sync, mesh=mesh, in_specs=node,
-                              out_specs=node)
+        shmap = compat.shard_map(sync, mesh=mesh, in_specs=node,
+                                 out_specs=node)
         compiled = jax.jit(shmap).lower(abs_grads).compile()
         colls = parse_collectives(compiled.as_text())
         hlo_bytes = sum(v["bytes"] for v in colls.values())

@@ -4,16 +4,18 @@ The simulation substrate (core/deleda.py) stacks the n agents on an array
 axis of ONE device. This launcher instead maps agents onto the MESH: each
 device owns one shard of nodes (documents never leave their device — the
 privacy constraint becomes a physical placement), local G-OEM updates run
-data-parallel, and the gossip averaging step is a ppermute matching round
-over the "data" axis (kernels/gossip_mix semantics, expressed as mesh
-collectives).
+data-parallel, and the gossip averaging step goes through the unified
+``repro.core.comm.MeshComm`` backend: each matching round is routed as
+intra-device row mixes plus one-hop bidirectional ``ppermute`` exchanges of
+the local statistics block. Per round a device moves O(K x V) bytes — NOT
+the O(n x K x V) of the all_gather-then-select this launcher used to do.
 
 Note the schedule adaptation (recorded in DESIGN.md): single-edge
 asynchronous gossip has no SPMD analogue — lockstep devices would idle.
 The mesh variant uses random MATCHING rounds (every node pairs at most
 once per round), which is the standard synchronous gossip generalization;
 with nodes_per_device shards it degrades gracefully to intra-device
-matchings plus cross-device ppermutes.
+matchings plus cross-device ppermute passes.
 
   PYTHONPATH=src python -m repro.launch.gossip_sim --nodes 8 --steps 50
 """
@@ -28,8 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.lda_paper import CONFIG as PAPER
 from repro.core import gossip
+from repro.core.comm import GossipSchedule, MeshComm
 from repro.core.graph import complete_graph, watts_strogatz_graph
 from repro.core.lda import LDAConfig, beta_distance, eta_star, init_stats
 from repro.core.oem import make_rho_schedule
@@ -39,14 +43,22 @@ from repro.launch.mesh import make_host_mesh
 
 
 def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
-                    batch_size: int, seed: int = 0, mesh=None):
-    """words/mask [n, D, L] node-sharded over the mesh "data" axis."""
+                    batch_size: int, seed: int = 0, mesh=None,
+                    schedule: GossipSchedule | None = None):
+    """words/mask [n, D, L] node-sharded over the mesh "data" axis.
+
+    Returns (stats [n, K, V], consensus trace, wall seconds). The gossip
+    path is pure MeshComm ppermute routing; the local-update step contains
+    no collectives at all.
+    """
     mesh = mesh or make_host_mesh()
     n = words.shape[0]
-    n_dev = mesh.devices.size
-    assert n % n_dev == 0, (n, n_dev)
-    rng = np.random.default_rng(seed)
-    matchings = gossip.draw_matching_schedule(graph, n_steps, rng)  # [T, n]
+    comm = MeshComm(mesh=mesh, axis_name="data")
+    assert n % comm.n_devices == 0, (n, comm.n_devices)
+    if schedule is None:
+        rng = np.random.default_rng(seed)
+        schedule = GossipSchedule.draw_matchings(graph, n_steps, rng)
+    partners = schedule.partners()                       # [T, n]
     rho_fn = make_rho_schedule("power")
 
     node = P("data")
@@ -68,34 +80,20 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         rho = rho_fn(step + 1).astype(stats.dtype)
         return (1 - rho) * stats + rho * result.stats
 
-    def step_fn(stats, steps, partners, key, w, m):
-        # stats [n_local, K, V]; partners [n_local] GLOBAL partner ids
+    def update_fn(stats, steps, key, w, m):
+        # stats [n_local, K, V]; pure local G-OEM — NO collectives here,
+        # gossip already happened via MeshComm outside this jit.
         n_local = stats.shape[0]
         dev = jax.lax.axis_index("data")
-        my_base = dev * n_local
-
-        # ---- gossip: exchange with partners (cross-device ppermute of the
-        # whole local block, then per-node gather) — one matching round
-        # moves each node's [K, V] statistic at most one hop.
-        # Build, per device, the partner DEVICE its nodes need; with
-        # node-contiguous placement a matching touches at most all devices,
-        # so we all_gather the matched statistics lazily via ppermute ring.
-        # Simplicity-first (n is small): all_gather then select.
-        all_stats = jax.lax.all_gather(stats, "data", tiled=True)  # [n,K,V]
-        mixed = 0.5 * (stats + all_stats[partners])
-        self_mask = (partners == (my_base + jnp.arange(n_local)))
-        stats = jnp.where(self_mask[:, None, None], stats, mixed)
-
-        # ---- local G-OEM updates (every node, synchronous variant)
         key = jax.random.fold_in(key, dev)   # per-device stream (varying)
         keys = jax.random.split(key, n_local)
         stats = jax.vmap(local_update, in_axes=(0, 0, 0, 0, 0))(
             stats, steps, keys, w, m)
         return stats, steps + 1
 
-    shmap = jax.shard_map(
-        step_fn, mesh=mesh,
-        in_specs=(node, node, node, P(), node, node),
+    shmap = compat.shard_map(
+        update_fn, mesh=mesh,
+        in_specs=(node, node, P(), node, node),
         out_specs=(node, node))
     jitted = jax.jit(shmap, donate_argnums=(0,))
 
@@ -104,8 +102,10 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
     consensus = []
     t0 = time.time()
     for t in range(n_steps):
+        # ---- gossip: one matching round, MeshComm ppermute routing
+        stats = comm.mix_matching(stats, partners[t])
+        # ---- local G-OEM updates (every node, synchronous variant)
         stats, steps = jitted(stats, steps,
-                              jnp.asarray(matchings[t]),
                               jax.random.key(seed * 100003 + t),
                               words, mask)
         if t % 10 == 0 or t == n_steps - 1:

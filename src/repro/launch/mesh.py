@@ -4,7 +4,8 @@ this module never touches jax device state)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import auto_axis_types, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,11 +16,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))
 
 
 def make_host_mesh():
     """Whatever devices exist locally, as a 1-D "data" mesh (smoke/tests)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), ("data",), axis_types=auto_axis_types(1))

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config, list_archs, smoke_variant
 from repro.core import decentralized as dec
@@ -126,7 +127,7 @@ def train_decentralized(cfg, args, mesh):
 
     node = P("data")
     state_spec = jax.tree.map(lambda x: node if jnp.ndim(x) else P(), state)
-    shmap = jax.shard_map(
+    shmap = compat.shard_map(
         step_fn, mesh=mesh,
         in_specs=(state_spec, node, node, node),
         out_specs=(state_spec, P()))

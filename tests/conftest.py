@@ -7,6 +7,11 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (several minutes)")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)

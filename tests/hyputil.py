@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+`pip install -r requirements-dev.txt` gives the real thing; without it the
+5 property-test modules must still *collect* (the tier-1 command dies at
+collection otherwise), so this module provides stand-ins under which every
+`@given` test becomes a cleanly-skipped zero-arg stub while the plain tests
+in the same module keep running.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """st.<anything>(...) placeholder; never drawn from."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass  # pragma: no cover
+
+            return stub
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

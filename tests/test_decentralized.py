@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 from repro.core import decentralized as dec
 
@@ -65,6 +65,46 @@ def test_is_exact():
     assert dec.is_exact(dec.parse_sync("gossip-hypercube[4]"), (16,))
     assert not dec.is_exact(dec.parse_sync("gossip-hypercube[3]"), (16,))
     assert not dec.is_exact(dec.parse_sync("gossip-ring[2]"), (16,))
+
+
+def test_rounds_per_axis_budget():
+    # hypercube budget spent across axes in order, capped at exact per axis
+    assert dec.rounds_per_axis(dec.parse_sync("gossip-hypercube"),
+                               (8, 4)) == [3, 2]
+    assert dec.rounds_per_axis(dec.parse_sync("gossip-hypercube[4]"),
+                               (8, 4)) == [3, 1]
+    assert dec.rounds_per_axis(dec.parse_sync("gossip-hypercube[2]"),
+                               (8, 4)) == [2, 0]
+    # size-1 axes consume nothing
+    assert dec.rounds_per_axis(dec.parse_sync("gossip-hypercube[2]"),
+                               (1, 8)) == [0, 2]
+    assert dec.rounds_per_axis(dec.parse_sync("allreduce"), (8, 4)) == [0, 0]
+
+
+def test_ring_budget_not_overspent_multi_axis():
+    """Regression: ring rounds never decremented the budget, so a
+    gossip-ring[2] over ("pod", "data") ran 2 rounds PER AXIS (4 total)."""
+    spec = dec.parse_sync("gossip-ring[2]")
+    per_axis = dec.rounds_per_axis(spec, (4, 4))
+    assert per_axis == [2, 0]
+    assert sum(per_axis) == spec.rounds
+    # the byte model agrees with the executed rounds
+    payload = 1000
+    assert dec.collective_bytes_per_sync(spec, payload, (4, 4)) == 2 * payload
+    # unlimited budget keeps the nominal 2 even/odd rounds per axis
+    assert dec.rounds_per_axis(dec.parse_sync("gossip-ring"),
+                               (4, 4)) == [2, 2]
+
+
+def test_sync_tree_sim_pallas_comm_matches_dense():
+    from repro.core import comm
+    x = jax.random.normal(jax.random.key(0), (8, 4, 32))   # [n, K, V]
+    spec = dec.parse_sync("gossip-hypercube[2]")
+    dense = dec.sync_tree_sim(x, spec, 8)
+    pallas = dec.sync_tree_sim(x, spec, 8,
+                               comm=comm.PallasSimComm(interpret=True))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(pallas),
+                               atol=1e-6)
 
 
 def test_collective_bytes_model():

@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 from repro.core import gossip
 from repro.core.graph import complete_graph, watts_strogatz_graph
@@ -95,6 +95,26 @@ def test_schedules_shapes():
     assert m.shape == (5, 12)
     for row in m:
         np.testing.assert_array_equal(row[row], np.arange(12))  # involution
+
+
+def test_matching_schedule_deterministic_valid_maximal():
+    g = watts_strogatz_graph(20, 4, 0.3, seed=3)
+    m1 = gossip.draw_matching_schedule(g, 40, np.random.default_rng(7))
+    m2 = gossip.draw_matching_schedule(g, 40, np.random.default_rng(7))
+    np.testing.assert_array_equal(m1, m2)           # same seed, same schedule
+    m3 = gossip.draw_matching_schedule(g, 40, np.random.default_rng(8))
+    assert (m1 != m3).any()                         # different seed differs
+    edge_set = {(int(a), int(b)) for a, b in g.edges}
+    edge_set |= {(b, a) for a, b in edge_set}
+    ident = np.arange(g.n_nodes)
+    for row in m1:
+        np.testing.assert_array_equal(row[row], ident)      # involution
+        for i, p in enumerate(row):
+            if p != i:
+                assert (i, int(p)) in edge_set              # real edges only
+        unmatched = row == ident
+        for a, b in g.edges:                                # maximality
+            assert not (unmatched[a] and unmatched[b])
 
 
 def test_envelope_monotone_in_lambda2():
