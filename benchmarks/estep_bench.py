@@ -1,0 +1,124 @@
+"""E-step benchmark: backend x fused-vs-per-node x batch size.
+
+Times the G-OEM E-step for A awake nodes of B documents each, two ways:
+
+  per_node  vmap over A single-node E-step calls — the old run_deleda hot
+            path, which hands the Pallas kernel A degenerate B-doc grids
+            (B=20 pads to 24 docs/node: wasted work + per-call overhead);
+  fused     ONE [A*B, L] sweep call via repro.core.estep.estep_batch —
+            one grid, no per-node padding (the new run_deleda hot path).
+
+Both paths consume identical per-node fold_in PRNG streams and are asserted
+allclose before timing. Writes BENCH_estep.json rows
+``{backend, mode, a, b, us_per_call, fused_speedup}`` — the perf trajectory
+future PRs must beat. Interpret-mode Pallas timings on CPU are NOT TPU
+predictions; the dense rows are the CPU reference.
+
+Usage: PYTHONPATH=src python -m benchmarks.estep_bench [--scale paper]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estep as estep_mod
+from repro.core.lda import LDAConfig, eta_star
+
+# paper scale == the §4 configuration: n=50 awake nodes (complete-graph
+# matching round), batch 20, L=32, K=5, V=100, 30 Gibbs sweeps.
+SCALES = {
+    "paper": dict(a_values=(10, 50), b=20, l=32, k=5, v=100,
+                  n_gibbs=30, burnin=15, iters=5),
+    "reduced": dict(a_values=(4, 16), b=8, l=16, k=4, v=64,
+                    n_gibbs=6, burnin=3, iters=5),
+    "smoke": dict(a_values=(2,), b=4, l=8, k=4, v=32,
+                  n_gibbs=4, burnin=2, iters=2),
+}
+
+
+def timeit_pair(fn_a, fn_b, *args, iters=3):
+    """Min-of-iters per-call wall times, interleaved so slow drift on a
+    noisy-neighbor CPU hits both candidates equally."""
+    out_a, out_b = fn_a(*args), fn_b(*args)
+    jax.block_until_ready((out_a, out_b))
+    best = [float("inf"), float("inf")]
+    for _ in range(iters):
+        for slot, fn in ((0, fn_a), (1, fn_b)):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args))
+            best[slot] = min(best[slot], time.time() - t0)
+    return best[0] * 1e6, best[1] * 1e6, out_a, out_b
+
+
+def make_inputs(cfg: LDAConfig, a: int, b: int, l: int):
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(0), i))(
+        jnp.arange(a))
+    words = jax.random.randint(jax.random.key(1), (a, b, l), 0,
+                               cfg.vocab_size)
+    mask = jax.random.uniform(jax.random.key(2), (a, b, l)) < 0.9
+    beta = eta_star(jax.random.uniform(
+        jax.random.key(3), (a, cfg.n_topics, cfg.vocab_size)))
+    return keys, words, mask, beta
+
+
+def bench_one(backend_name: str, cfg: LDAConfig, a: int, b: int, l: int,
+              iters: int):
+    backend = estep_mod.get_estep(backend_name)
+    keys, words, mask, beta = make_inputs(cfg, a, b, l)
+
+    fused = jax.jit(lambda kk, w, m, bt: estep_mod.estep_batch(
+        backend, cfg, kk, w, m, bt))
+    per_node = jax.jit(jax.vmap(
+        lambda kk, w, m, bt: backend(cfg, kk, w, m, bt).stats))
+
+    t_f, t_p, out_f, out_p = timeit_pair(fused, per_node, keys, words,
+                                         mask, beta, iters=iters)
+    err = float(jnp.abs(out_f - out_p).max())
+    assert err < 1e-5, (backend_name, a, b, err)
+    return t_f, t_p
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="reduced",
+                    choices=sorted(SCALES))
+    ap.add_argument("-o", "--out", default="BENCH_estep.json")
+    args = ap.parse_args(argv)
+    sc = SCALES[args.scale]
+
+    cfg = LDAConfig(n_topics=sc["k"], vocab_size=sc["v"], alpha=0.5,
+                    doc_len_max=sc["l"], n_gibbs=sc["n_gibbs"],
+                    n_gibbs_burnin=sc["burnin"])
+    rows = []
+    for backend in estep_mod.ESTEP_BACKENDS:
+        for a in sc["a_values"]:
+            t_f, t_p = bench_one(backend, cfg, a, sc["b"], sc["l"],
+                                 sc["iters"])
+            speedup = t_p / t_f
+            rows.append(dict(backend=backend, mode="fused", a=a, b=sc["b"],
+                             us_per_call=round(t_f, 1),
+                             fused_speedup=round(speedup, 3)))
+            rows.append(dict(backend=backend, mode="per_node", a=a,
+                             b=sc["b"], us_per_call=round(t_p, 1),
+                             fused_speedup=1.0))
+            print(f"{backend:>6s} a={a:3d} b={sc['b']:3d}  "
+                  f"fused {t_f/1e3:9.1f} ms   per_node {t_p/1e3:9.1f} ms   "
+                  f"speedup {speedup:5.2f}x")
+
+    payload = dict(scale=args.scale,
+                   config=dict(k=sc["k"], v=sc["v"], l=sc["l"],
+                               n_gibbs=sc["n_gibbs"]),
+                   backend_platform=jax.default_backend(),
+                   rows=rows)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,13 @@ def main(argv=None):
     sections.append("kernels")
 
     print("=" * 72)
+    print("estep: fused vs per-node E-step backend sweep")
+    print("=" * 72)
+    from benchmarks import estep_bench
+    estep_bench.main(["--scale", args.scale])
+    sections.append("estep")
+
+    print("=" * 72)
     print("gossip vs all-reduce collective bytes (model)")
     print("=" * 72)
     from benchmarks import gossip_collectives

@@ -2,10 +2,13 @@
 
 Layout:
   lda.py            LDA model, M-step eta*(s), generative process, D(beta,beta*)
-  gibbs.py          collapsed-Gibbs E-step (pure-jnp oracle for the kernel)
+  estep.py          unified E-step layer: shared Gibbs sweep core, dense/pallas
+                    backends, fused multi-node batch path
+  gibbs.py          collapsed-Gibbs E-step (thin wrapper over estep.py)
   oem.py            centralized G-OEM baseline (paper eq. 2)
   graph.py          communication graphs, W matrices, lambda2 / spectral gap
   gossip.py         gossip schedules + mixing (simulation & mesh collectives)
+  comm.py           unified gossip communication layer (three backends)
   deleda.py         Algorithm 1 (sync) + async variant + consensus diagnostics
   decentralized.py  gossip sync for arbitrary pytrees (the generalization)
   evaluation.py     left-to-right held-out perplexity (Wallach et al. 2009)

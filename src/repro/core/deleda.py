@@ -21,10 +21,15 @@ irregular graphs.
 
 Gossip mixing goes through the unified :mod:`repro.core.comm` layer
 (``DeledaConfig.comm_backend``): the pure-jnp oracle or the gossip_mix
-Pallas kernel, interchangeable and test-asserted equivalent. Per-node PRNG
-streams are derived by ``fold_in(key, node_id)``, which makes an edge
-schedule and its one-pair-per-round matching view produce bit-identical
-trajectories (tests/test_comm.py).
+Pallas kernel, interchangeable and test-asserted equivalent. The local
+G-OEM E-steps go through the twin :mod:`repro.core.estep` layer
+(``DeledaConfig.estep_backend``): all awake nodes' minibatches are fused
+into ONE [A*B, L] sweep call per iteration (one Pallas grid instead of A
+degenerate B-doc grids) and the per-node [K, V] statistics are scattered
+back. Per-node PRNG streams are derived by ``fold_in(key, node_id)``, which
+makes an edge schedule and its one-pair-per-round matching view produce
+bit-identical trajectories (tests/test_comm.py) and keeps the fused batch
+bit-identical to per-node E-step calls (tests/test_estep.py).
 
 The whole trajectory (schedule pre-drawn host-side) folds into a single
 ``lax.scan`` — one jit compilation, reproducible, and the natural shape for
@@ -34,15 +39,16 @@ the TPU-mesh variant (launch/gossip_sim.py, core/decentralized.py).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comm as comm_mod
-from repro.core import gibbs as gibbs_mod
+from repro.core import estep as estep_mod
 from repro.core import gossip
 from repro.core.graph import Graph
 from repro.core.lda import LDAConfig, eta_star, init_stats
@@ -60,18 +66,30 @@ class DeledaConfig:
     rho_kappa: float = 0.6
     rho_t0: float = 10.0
     degree_correction: bool = True   # Remark 1 ([4]) reweighting, async only
-    use_pallas: bool = False         # E-step via the lda_gibbs TPU kernel
+    use_pallas: bool = False         # DEPRECATED alias for estep_backend
     comm_backend: str = "dense"      # gossip mixing: "dense" | "pallas"
+    estep_backend: str = "dense"     # local E-steps: "dense" | "pallas"
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {self.mode!r}")
+        if self.use_pallas:
+            warnings.warn(
+                "DeledaConfig.use_pallas is deprecated; use "
+                "estep_backend='pallas' instead", DeprecationWarning,
+                stacklevel=3)
+            if self.estep_backend == "dense":
+                object.__setattr__(self, "estep_backend", "pallas")
         if self.comm_backend not in comm_mod.SIM_BACKENDS:
             raise ValueError(
                 f"comm_backend must be one of {comm_mod.SIM_BACKENDS} "
                 f"inside the simulation substrate, got "
                 f"{self.comm_backend!r} (the mesh backend lives in "
                 f"launch/gossip_sim.py)")
+        if self.estep_backend not in estep_mod.ESTEP_BACKENDS:
+            raise ValueError(
+                f"estep_backend must be one of {estep_mod.ESTEP_BACKENDS}, "
+                f"got {self.estep_backend!r}")
 
 
 class DeledaTrace(NamedTuple):
@@ -79,28 +97,6 @@ class DeledaTrace(NamedTuple):
     steps: jax.Array          # [n] int32 per-node local-update counters
     history: jax.Array        # [R, n, K, V] recorded stats snapshots
     consensus: jax.Array      # [R] ||S - mean||_F at each record point
-
-
-def _estep(config: DeledaConfig):
-    if config.use_pallas:
-        from repro.kernels.lda_gibbs import ops as lda_gibbs_ops
-        return lda_gibbs_ops.gibbs_estep
-    return gibbs_mod.gibbs_estep
-
-
-def _local_update(config: DeledaConfig, stats, step, key, words, mask,
-                  rho_fn, weight):
-    """One node's G-OEM update (eq. 2). stats [K,V], words/mask [B,L].
-
-    weight scales rho (1.0, or the degree correction factor); returns the
-    updated (stats, step).
-    """
-    t = step + 1
-    beta = eta_star(stats, config.lda.tau)
-    result = _estep(config)(config.lda, key, words, mask, beta)
-    rho = (rho_fn(t) * weight).astype(stats.dtype)
-    rho = jnp.clip(rho, 0.0, 1.0)
-    return (1.0 - rho) * stats + rho * result.stats, t
 
 
 def _resolve_schedule_kind(schedule: jax.Array, n: int, kind: str) -> str:
@@ -144,6 +140,7 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     n, d, l = words.shape
     kind = _resolve_schedule_kind(schedule, n, schedule_kind)
     comm = comm_mod.get_communicator(config.comm_backend)
+    estep = estep_mod.get_estep(config.estep_backend)
     rho_fn = make_rho_schedule(config.rho_kind, kappa=config.rho_kappa,
                                t0=config.rho_t0)
 
@@ -170,20 +167,26 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
 
     def update_rows(stats_rows, steps_rows, ids, k_sel, k_gibbs,
                     words_rows, mask_rows, corr_rows):
-        """Vmapped local updates for a set of node rows.
+        """Fused G-OEM updates (eq. 2) for a set of awake node rows.
 
         Per-node streams come from fold_in(key, GLOBAL node id), so the
         same node sees the same stream regardless of which/how many nodes
         are updated alongside it — the property that makes edge schedules
-        and their 1-pair matching views bit-identical.
+        and their 1-pair matching views bit-identical, and that keeps this
+        fused [A*B, L] batch bit-identical to per-node E-step calls.
         """
-        def one(s, t, i, w_, m_, c):
-            bw, bm = sample_batch(jax.random.fold_in(k_sel, i), w_, m_)
-            return _local_update(config, s, t,
-                                 jax.random.fold_in(k_gibbs, i), bw, bm,
-                                 rho_fn, c)
-        return jax.vmap(one)(stats_rows, steps_rows, ids, words_rows,
-                             mask_rows, corr_rows)
+        bw, bm = jax.vmap(
+            lambda i, w_, m_: sample_batch(jax.random.fold_in(k_sel, i),
+                                           w_, m_))(
+            ids, words_rows, mask_rows)                   # [A, B, L]
+        keys = jax.vmap(lambda i: jax.random.fold_in(k_gibbs, i))(ids)
+        beta = eta_star(stats_rows, config.lda.tau)       # [A, K, V]
+        stats_hat = estep_mod.estep_batch(estep, config.lda, keys, bw, bm,
+                                          beta)           # [A, K, V]
+        t = steps_rows + 1
+        rho = (rho_fn(t) * corr_rows).astype(stats_rows.dtype)
+        rho = jnp.clip(rho, 0.0, 1.0)[:, None, None]
+        return (1.0 - rho) * stats_rows + rho * stats_hat, t
 
     def iteration(carry, inp):
         stats, steps = carry

@@ -1,0 +1,299 @@
+"""Unified G-OEM E-step layer: one categorical-sweep core, two backends.
+
+The paper's per-iteration cost is dominated by the E-step (eq. 2): collapsed
+Gibbs sweeps over each awake node's minibatch — exactly the "intractable
+expectation" the paper approximates by sampling. That categorical-sweep core
+(inverse-CDF draw, masked n_dk add/remove, Rao-Blackwell accumulation) used
+to be implemented three separate times in this repo: ``core/gibbs.py``
+(training), ``kernels/lda_gibbs`` (a Pallas kernel that defaulted to
+interpreter mode even on TPU), and ``core/evaluation.py`` (the left-to-right
+estimator's inner resample loop). This module is the single substrate they
+all now share — the compute-side twin of :mod:`repro.core.comm`:
+
+* the **shared sweep core** — :func:`sample_from_unnormalized` (inverse-CDF
+  categorical draw), :func:`gibbs_position_update` (one masked collapsed-
+  Gibbs move, broadcast over any leading batch dims) and
+  :func:`gibbs_sweeps_dense` (full sweeps over a document batch). The Pallas
+  kernel implements the identical update with the identical pre-drawn
+  uniform stream, so both backends are bit-compatible per document.
+
+* the **EStep registry** — :class:`DenseEStep` (pure jnp) and
+  :class:`PallasEStep` (the lda_gibbs kernel; ``interpret=None``
+  auto-detects, compiled on TPU), selected via
+  ``DeledaConfig.estep_backend`` (the old ``use_pallas`` bool is a
+  deprecated alias). ``rao_blackwell=False`` falls back to the dense
+  backend with a warning — the kernel is Rao-Blackwellized only.
+
+* the **fused batch path** — :func:`estep_batch` gathers all awake nodes'
+  minibatches into ONE ``[A*B, L]`` sweep call (one Pallas grid over
+  ``A*B/block_docs`` document blocks instead of A degenerate ``B``-doc
+  grids) and assembles per-node ``[K, V]`` statistics back out. Per-node
+  PRNG streams come from the caller's ``fold_in(key, node_id)`` keys, and
+  every sweep op is elementwise or a last-axis reduction, so the fused path
+  is bit-identical to vmapping the single-node E-step (tests/test_estep.py).
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lda import LDAConfig
+
+__all__ = [
+    "GibbsResult", "sample_from_unnormalized", "gibbs_position_update",
+    "gibbs_sweeps_dense", "draw_gibbs_randoms", "stats_from_per_pos",
+    "DenseEStep", "PallasEStep", "get_estep", "ESTEP_BACKENDS",
+    "estep_batch",
+]
+
+
+class GibbsResult(NamedTuple):
+    stats: jax.Array      # [K, V] mean per-document sufficient statistics
+    z: jax.Array          # [B, L] final topic assignments (int32)
+    n_dk: jax.Array       # [B, K] final doc-topic counts
+    theta: jax.Array      # [B, K] posterior-mean topic proportions
+
+
+# ----------------------------------------------------------------------------
+# Shared categorical-sweep core
+# ----------------------------------------------------------------------------
+
+def _one_hot(z: jax.Array, k: int, dtype) -> jax.Array:
+    """[...] int -> [..., k] one-hot via iota+compare (MXU-free)."""
+    return (z[..., None] == jnp.arange(k, dtype=z.dtype)).astype(dtype)
+
+
+def sample_from_unnormalized(probs: jax.Array, u: jax.Array) -> jax.Array:
+    """Inverse-CDF sample from an unnormalized probability vector [..., K]."""
+    cum = jnp.cumsum(probs, axis=-1)
+    return jnp.sum(cum < u[..., None] * cum[..., -1:], axis=-1).astype(
+        jnp.int32)
+
+
+def gibbs_position_update(n_dk, zi, bw, mf, u, alpha):
+    """One masked collapsed-Gibbs move at a single position.
+
+    The categorical core shared by training sweeps, the Pallas-kernel oracle
+    and the left-to-right evaluator: remove the current assignment from the
+    counts, draw from (n_dk + alpha) * beta[:, w_i] by inverse CDF, add the
+    new assignment back, and expose the Rao-Blackwellized conditional.
+
+    n_dk [..., K] counts; zi [...] int32 current assignments; bw [..., K]
+    likelihood rows beta[:, w_i]; mf [...] float 1.0/0.0 mask; u [...]
+    uniforms. Leading dims broadcast (e.g. bw/mf may carry a size-1
+    particle axis). Returns (new_z, n_dk, post).
+    """
+    k = n_dk.shape[-1]
+    n_dk = n_dk - mf[..., None] * _one_hot(zi, k, n_dk.dtype)
+    probs = (n_dk + alpha) * bw                               # [..., K]
+    new_z = sample_from_unnormalized(probs, u)
+    new_z = jnp.where(mf > 0, new_z, zi)
+    n_dk = n_dk + mf[..., None] * _one_hot(new_z, k, n_dk.dtype)
+    post = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    return new_z, n_dk, post
+
+
+def gibbs_sweeps_dense(beta_w: jax.Array, maskf: jax.Array,
+                       uniforms: jax.Array, z0: jax.Array, *,
+                       alpha: float, n_sweeps: int, burnin: int,
+                       rao_blackwell: bool = True
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pure-jnp Gibbs sweeps over a batch of documents (the dense backend).
+
+    beta_w [B, L, K], maskf [B, L] float, uniforms [S, B, L], z0 [B, L] i32.
+    Returns (per_pos [B, L, K], z [B, L], ndk_mean [B, K]) where per_pos is
+    the mean over kept sweeps of the Rao-Blackwellized conditional (or of
+    the sampled one-hot assignment with rao_blackwell=False).
+
+    Bit-compatible with the lda_gibbs Pallas kernel: same uniform stream,
+    same per-position op order.
+    """
+    b, l, k = beta_w.shape
+    n_keep = n_sweeps - burnin
+    n_dk0 = jnp.einsum("blk,bl->bk", _one_hot(z0, k, beta_w.dtype), maskf)
+
+    def position(i, carry, s):
+        z, n_dk, acc = carry
+        m = maskf[:, i]
+        new_z, n_dk, post = gibbs_position_update(
+            n_dk, z[:, i], beta_w[:, i], m, uniforms[s, :, i], alpha)
+        collect = jnp.asarray(s >= burnin, post.dtype)
+        contrib = post if rao_blackwell else _one_hot(new_z, k, post.dtype)
+        acc = acc.at[:, i].add(collect * m[:, None] * contrib)
+        z = z.at[:, i].set(new_z)
+        return z, n_dk, acc
+
+    def sweep(carry, s):
+        z, n_dk, acc, ndk_acc = carry
+        z, n_dk, acc = jax.lax.fori_loop(
+            0, l, lambda i, c: position(i, c, s), (z, n_dk, acc))
+        keep = jnp.asarray(s >= burnin, n_dk.dtype)
+        return (z, n_dk, acc, ndk_acc + keep * n_dk), None
+
+    acc0 = jnp.zeros((b, l, k), beta_w.dtype)
+    ndk0 = jnp.zeros((b, k), beta_w.dtype)
+    (z, _n_dk, acc, ndk_acc), _ = jax.lax.scan(
+        sweep, (z0, n_dk0, acc0, ndk0), jnp.arange(n_sweeps))
+
+    per_pos = acc / n_keep * maskf[..., None]
+    return per_pos, z, ndk_acc / n_keep
+
+
+# ----------------------------------------------------------------------------
+# Front-end pieces shared by both backends and by the fused batch path
+# ----------------------------------------------------------------------------
+
+def draw_gibbs_randoms(config: LDAConfig, key: jax.Array, b: int, l: int,
+                       dtype) -> tuple[jax.Array, jax.Array]:
+    """The E-step PRNG stream: (uniforms [S, B, L], z0 [B, L])."""
+    k_init, k_u = jax.random.split(key)
+    uniforms = jax.random.uniform(k_u, (config.n_gibbs, b, l), dtype)
+    z0 = jax.random.randint(k_init, (b, l), 0, config.n_topics, jnp.int32)
+    return uniforms, z0
+
+
+def stats_from_per_pos(words: jax.Array, per_pos: jax.Array,
+                       vocab_size: int) -> jax.Array:
+    """Scatter [B, L, K] per-position stats into the per-doc-mean [K, V]."""
+    b, _l, k = per_pos.shape
+    flat_w = words.reshape(-1)
+    flat_p = per_pos.reshape(-1, k)
+    stats = jnp.zeros((k, vocab_size), per_pos.dtype)
+    return stats.at[:, flat_w].add(flat_p.T) / b
+
+
+# ----------------------------------------------------------------------------
+# EStep backends (registry mirrors repro.core.comm)
+# ----------------------------------------------------------------------------
+
+class _EStepBase:
+    """Common front-end: PRNG stream + stats assembly around .sweeps()."""
+
+    def __call__(self, config: LDAConfig, key: jax.Array, words: jax.Array,
+                 mask: jax.Array, beta: jax.Array,
+                 rao_blackwell: bool = True) -> GibbsResult:
+        """Run the full E-step on a batch of documents.
+
+        words: [B, L] int32 token ids, mask: [B, L] bool, beta: [K, V].
+        Returns GibbsResult with stats = mean over documents of the expected
+        per-document (topic, word) count matrix (shape [K, V]).
+        """
+        b, l = words.shape
+        k = config.n_topics
+        uniforms, z0 = draw_gibbs_randoms(config, key, b, l, beta.dtype)
+        beta_w = jnp.take(beta.T, words, axis=0)             # [B, L, K]
+        maskf = mask.astype(beta.dtype)
+        per_pos, z, ndk_mean = self.sweeps(
+            beta_w, maskf, uniforms, z0, alpha=config.alpha,
+            n_sweeps=config.n_gibbs, burnin=config.n_gibbs_burnin,
+            rao_blackwell=rao_blackwell)
+        stats = stats_from_per_pos(words, per_pos, config.vocab_size)
+        n_dk = jnp.einsum("blk,bl->bk", _one_hot(z, k, beta.dtype), maskf)
+        theta = ndk_mean + config.alpha
+        theta = theta / theta.sum(-1, keepdims=True)
+        return GibbsResult(stats=stats, z=z, n_dk=n_dk, theta=theta)
+
+
+class DenseEStep(_EStepBase):
+    """Pure-jnp backend: the correctness oracle and the CPU fast path."""
+
+    name = "dense"
+
+    def sweeps(self, beta_w, maskf, uniforms, z0, *, alpha, n_sweeps,
+               burnin, rao_blackwell=True):
+        return gibbs_sweeps_dense(beta_w, maskf, uniforms, z0, alpha=alpha,
+                                  n_sweeps=n_sweeps, burnin=burnin,
+                                  rao_blackwell=rao_blackwell)
+
+
+class PallasEStep(_EStepBase):
+    """The kernels/lda_gibbs TPU kernel, bit-compatible with the dense core.
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere
+    (kernels/common.resolve_interpret — the same dispatch gossip_mix uses).
+    The kernel is Rao-Blackwellized only; ``rao_blackwell=False`` falls back
+    to the dense backend with a warning instead of crashing a config sweep.
+    """
+
+    name = "pallas"
+
+    def __init__(self, block_docs: int = 8, interpret: bool | None = None):
+        self.block_docs = block_docs
+        self.interpret = interpret
+
+    def sweeps(self, beta_w, maskf, uniforms, z0, *, alpha, n_sweeps,
+               burnin, rao_blackwell=True):
+        if not rao_blackwell:
+            warnings.warn(
+                "the lda_gibbs kernel is Rao-Blackwellized only; "
+                "falling back to the dense E-step for rao_blackwell=False",
+                stacklevel=2)
+            return gibbs_sweeps_dense(beta_w, maskf, uniforms, z0,
+                                      alpha=alpha, n_sweeps=n_sweeps,
+                                      burnin=burnin, rao_blackwell=False)
+        from repro.kernels.lda_gibbs import ops as lda_gibbs_ops
+        return lda_gibbs_ops.gibbs_sweeps(
+            beta_w, maskf, uniforms, z0, alpha=alpha, n_sweeps=n_sweeps,
+            burnin=burnin, block_docs=self.block_docs,
+            interpret=self.interpret)
+
+
+ESTEP_BACKENDS = ("dense", "pallas")
+
+
+def get_estep(name: str, **kwargs) -> _EStepBase:
+    """Factory: 'dense' | 'pallas' (kwargs go to the backend)."""
+    if name == "dense":
+        return DenseEStep(**kwargs)
+    if name == "pallas":
+        return PallasEStep(**kwargs)
+    raise ValueError(f"unknown E-step backend {name!r}; "
+                     f"want dense | pallas")
+
+
+# ----------------------------------------------------------------------------
+# Fused multi-node batch path
+# ----------------------------------------------------------------------------
+
+def estep_batch(backend: _EStepBase, config: LDAConfig, keys: jax.Array,
+                words: jax.Array, mask: jax.Array, beta: jax.Array,
+                rao_blackwell: bool = True) -> jax.Array:
+    """All awake nodes' E-steps as ONE fused sweep call.
+
+    keys [A] per-node PRNG keys (the caller's fold_in(key, node_id)
+    streams), words/mask [A, B, L] per-node minibatches, beta [A, K, V]
+    per-node topic matrices. Returns per-node statistics [A, K, V].
+
+    The A node minibatches are flattened into one [A*B, L] document batch —
+    a single Pallas grid over A*B/block_docs blocks instead of A degenerate
+    B-doc grids — and the per-node [K, V] scatters are applied to the
+    reshaped result, so the output is bit-identical to
+    ``vmap(lambda k, w, m, bt: backend(config, k, w, m, bt).stats)``:
+    every sweep op is elementwise or a last-axis reduction, independent of
+    which documents share the batch.
+    """
+    a, b, l = words.shape
+    k = config.n_topics
+    s = config.n_gibbs
+
+    uniforms, z0 = jax.vmap(
+        lambda kk: draw_gibbs_randoms(config, kk, b, l, beta.dtype))(keys)
+    beta_w = jax.vmap(lambda bt, w: jnp.take(bt.T, w, axis=0))(beta, words)
+    maskf = mask.astype(beta.dtype)
+
+    per_pos, _z, _ndk = backend.sweeps(
+        beta_w.reshape(a * b, l, k),
+        maskf.reshape(a * b, l),
+        jnp.moveaxis(uniforms, 0, 1).reshape(s, a * b, l),
+        z0.reshape(a * b, l),
+        alpha=config.alpha, n_sweeps=s, burnin=config.n_gibbs_burnin,
+        rao_blackwell=rao_blackwell)
+
+    per_pos = per_pos.reshape(a, b, l, k)
+    return jax.vmap(
+        lambda w, p: stats_from_per_pos(w, p, config.vocab_size))(
+            words, per_pos)

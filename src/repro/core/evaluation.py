@@ -11,6 +11,12 @@ resampled from their conditional before each new position is scored:
     p(w_n | z_{<n}) = sum_k  (n^p_{<n,k} + alpha_k) / (n_{<n} + sum alpha)
                              * beta[k, w_n].
 
+The inner resample is the same masked categorical move as the training
+E-step and runs on the shared sweep core (`repro.core.estep`), vectorized
+over particles; all documents are batched through ONE scan over positions
+(instead of a vmap of per-document scans), so the O(L^2) resample loop —
+the fig1a wall-time hot spot — is a single [B, P]-wide program.
+
 The paper reports the *relative* log-perplexity error LP/LP* - 1 where
 LP = -log p(X | eta) averaged over test documents and LP* uses the
 generating parameters eta*.
@@ -23,68 +29,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.lda import LDAConfig
-
-
-def _l2r_single(key: jax.Array, words: jax.Array, mask: jax.Array,
-                beta: jax.Array, alpha: float, n_particles: int) -> jax.Array:
-    """log p(words) estimate for ONE document. words/mask: [L]."""
-    l = words.shape[0]
-    k_dim = beta.shape[0]
-    beta_w = beta.T[words]                                    # [L, K]
-    alpha_sum = alpha * k_dim
-
-    u_resample = jax.random.uniform(key, (l, n_particles, l))
-    u_draw = jax.random.uniform(jax.random.fold_in(key, 1), (l, n_particles))
-
-    def sample_cat(probs, u):
-        """Inverse-CDF draw from unnormalized probs [..., K]."""
-        cum = jnp.cumsum(probs, axis=-1)
-        return jnp.sum(cum < u[..., None] * cum[..., -1:], axis=-1)
-
-    def position(carry, inp):
-        # carry: (z [P, L] int32 assignments so far, n_k [P, K] counts <n)
-        z, n_k = carry
-        n_idx, u_rs, u_dr = inp
-        pos_mask = (jnp.arange(l) < n_idx) & mask              # positions < n
-
-        # resample z_i for i < n, sequentially per particle (vectorized over P)
-        def resample(i, st):
-            z, n_k = st
-            m = pos_mask[i]
-            old = z[:, i]                                      # [P]
-            onehot_old = jax.nn.one_hot(old, k_dim)
-            n_k = n_k - jnp.where(m, 1.0, 0.0) * onehot_old
-            probs = (n_k + alpha) * beta_w[i][None, :]         # [P, K]
-            new = sample_cat(probs, u_rs[:, i]).astype(jnp.int32)
-            new = jnp.where(m, new, old)
-            n_k = n_k + jnp.where(m, 1.0, 0.0) * jax.nn.one_hot(new, k_dim)
-            z = z.at[:, i].set(new)
-            return z, n_k
-
-        z, n_k = jax.lax.fori_loop(0, l, resample, (z, n_k))
-
-        # predictive probability of w_n given z_<n
-        n_lt = n_k.sum(-1, keepdims=True)                      # [P, 1]
-        theta_hat = (n_k + alpha) / (n_lt + alpha_sum)         # [P, K]
-        p_w = (theta_hat * beta_w[n_idx][None, :]).sum(-1)     # [P]
-        log_p = jnp.log(jnp.maximum(p_w.mean(), 1e-30))
-        log_p = jnp.where(mask[n_idx], log_p, 0.0)
-
-        # draw z_n for each particle and add to counts
-        probs_n = (n_k + alpha) * beta_w[n_idx][None, :]
-        z_n = sample_cat(probs_n, u_dr).astype(jnp.int32)
-        add = jnp.where(mask[n_idx], 1.0, 0.0)
-        n_k = n_k + add * jax.nn.one_hot(z_n, k_dim)
-        z = z.at[:, n_idx].set(jnp.where(mask[n_idx], z_n, z[:, n_idx]))
-        return (z, n_k), log_p
-
-    z0 = jnp.zeros((n_particles, l), jnp.int32)
-    nk0 = jnp.zeros((n_particles, k_dim), beta.dtype)
-    (_, _), log_ps = jax.lax.scan(
-        position, (z0, nk0),
-        (jnp.arange(l), u_resample, u_draw))
-    return log_ps.sum()
+from repro.core import estep as estep_mod
 
 
 @partial(jax.jit, static_argnames=("n_particles",))
@@ -93,9 +38,61 @@ def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
                                  alpha: float,
                                  n_particles: int = 10) -> jax.Array:
     """[B] per-document log-likelihood estimates. words/mask: [B, L]."""
-    keys = jax.random.split(key, words.shape[0])
-    return jax.vmap(_l2r_single, in_axes=(0, 0, 0, None, None, None))(
-        keys, words, mask, beta, alpha, n_particles)
+    b, l = words.shape
+    k_dim = beta.shape[0]
+    p = n_particles
+    beta_w = jnp.take(beta.T, words, axis=0)                  # [B, L, K]
+    maskf = mask.astype(beta.dtype)
+    alpha_sum = alpha * k_dim
+
+    # Per-document streams (fold_in keeps them independent of batching).
+    keys = jax.random.split(key, b)
+    u_rs = jax.vmap(lambda kk: jax.random.uniform(kk, (l, p, l)))(keys)
+    u_dr = jax.vmap(lambda kk: jax.random.uniform(
+        jax.random.fold_in(kk, 1), (l, p)))(keys)
+
+    def position(carry, inp):
+        # carry: (z [B, P, L] int32 assignments so far, n_k [B, P, K])
+        z, n_k = carry
+        n_idx, u_rs_n, u_dr_n = inp         # [B, P, L], [B, P]
+        # positions < n, still masked by the document mask
+        pos_maskf = jnp.where(jnp.arange(l)[None, :] < n_idx, maskf, 0.0)
+
+        # resample z_i for i < n — the shared masked categorical move,
+        # batched over documents and particles at once
+        def resample(i, st):
+            z, n_k = st
+            new_z, n_k, _post = estep_mod.gibbs_position_update(
+                n_k, z[:, :, i], beta_w[:, None, i, :],
+                pos_maskf[:, i][:, None], u_rs_n[:, :, i], alpha)
+            z = z.at[:, :, i].set(new_z)
+            return z, n_k
+
+        z, n_k = jax.lax.fori_loop(0, l, resample, (z, n_k))
+
+        # predictive probability of w_n given z_<n
+        bw_n = beta_w[:, n_idx, :]                             # [B, K]
+        n_lt = n_k.sum(-1, keepdims=True)                      # [B, P, 1]
+        theta_hat = (n_k + alpha) / (n_lt + alpha_sum)         # [B, P, K]
+        p_w = (theta_hat * bw_n[:, None, :]).sum(-1)           # [B, P]
+        log_p = jnp.log(jnp.maximum(p_w.mean(axis=1), 1e-30))  # [B]
+        log_p = jnp.where(mask[:, n_idx], log_p, 0.0)
+
+        # draw z_n for each particle and add to counts
+        probs_n = (n_k + alpha) * bw_n[:, None, :]             # [B, P, K]
+        z_n = estep_mod.sample_from_unnormalized(probs_n, u_dr_n)
+        add = maskf[:, n_idx][:, None, None]                   # [B, 1, 1]
+        n_k = n_k + add * jax.nn.one_hot(z_n, k_dim, dtype=n_k.dtype)
+        z = z.at[:, :, n_idx].set(
+            jnp.where(mask[:, n_idx][:, None], z_n, z[:, :, n_idx]))
+        return (z, n_k), log_p
+
+    z0 = jnp.zeros((b, p, l), jnp.int32)
+    nk0 = jnp.zeros((b, p, k_dim), beta.dtype)
+    (_, _), log_ps = jax.lax.scan(
+        position, (z0, nk0),
+        (jnp.arange(l), jnp.moveaxis(u_rs, 1, 0), jnp.moveaxis(u_dr, 1, 0)))
+    return log_ps.sum(axis=0)                                  # [B]
 
 
 def log_perplexity(key: jax.Array, words: jax.Array, mask: jax.Array,

@@ -12,120 +12,34 @@ conditional posterior is accumulated instead of the sampled one-hot
 assignment (same expectation, lower variance — the standard collapsed
 estimator used by G-OEM).
 
-All randomness is pre-drawn as uniforms so the same routine is usable as the
-oracle for the Pallas kernel (`repro.kernels.lda_gibbs`), which consumes the
-same uniform stream.
+This module is now a thin back-compat wrapper: the categorical-sweep core
+and the backend registry live in :mod:`repro.core.estep` (one substrate
+shared with the lda_gibbs Pallas kernel and the left-to-right evaluator).
+All randomness is pre-drawn as uniforms so every backend consumes the same
+stream and stays bit-compatible.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.estep import GibbsResult, get_estep
 from repro.core.lda import LDAConfig
 
-
-class GibbsResult(NamedTuple):
-    stats: jax.Array      # [K, V] mean per-document sufficient statistics
-    z: jax.Array          # [B, L] final topic assignments (int32)
-    n_dk: jax.Array       # [B, K] final doc-topic counts
-    theta: jax.Array      # [B, K] posterior-mean topic proportions
-
-
-def _sample_from_unnormalized(probs: jax.Array, u: jax.Array) -> jax.Array:
-    """Inverse-CDF sample from an unnormalized probability vector [..., K]."""
-    cum = jnp.cumsum(probs, axis=-1)
-    total = cum[..., -1:]
-    return jnp.sum(cum < u[..., None] * total, axis=-1).astype(jnp.int32)
-
-
-def _doc_sweep(words, mask, beta_w, alpha, n_dk, z, uniforms, collect):
-    """One Gibbs sweep over a single document.
-
-    words: [L] int32, mask: [L] bool, beta_w: [L, K] rows beta[:, w_i],
-    n_dk: [K] float, z: [L] int32, uniforms: [L] float in [0,1),
-    collect: bool — whether to accumulate Rao-Blackwellized probabilities.
-
-    Returns (n_dk, z, acc) where acc is [L, K] per-position posterior
-    (zeros if collect is False).
-    """
-    k_dim = n_dk.shape[0]
-
-    def body(i, carry):
-        n_dk, z, acc = carry
-        m = mask[i]
-        zi = z[i]
-        # remove current assignment
-        n_dk = n_dk - jnp.where(m, 1.0, 0.0) * jax.nn.one_hot(zi, k_dim)
-        probs = (n_dk + alpha) * beta_w[i]                   # [K]
-        new_z = _sample_from_unnormalized(probs, uniforms[i])
-        new_z = jnp.where(m, new_z, zi)
-        n_dk = n_dk + jnp.where(m, 1.0, 0.0) * jax.nn.one_hot(new_z, k_dim)
-        post = probs / jnp.maximum(probs.sum(), 1e-30)
-        acc = acc.at[i].set(jnp.where(collect & m, post, acc[i]))
-        z = z.at[i].set(new_z)
-        return n_dk, z, acc
-
-    acc0 = beta_w * 0.0   # zeros derived from data (keeps shard_map vma)
-    return jax.lax.fori_loop(0, words.shape[0], body, (n_dk, z, acc0))
+__all__ = ["GibbsResult", "gibbs_estep"]
 
 
 @partial(jax.jit, static_argnames=("config", "rao_blackwell"))
 def gibbs_estep(config: LDAConfig, key: jax.Array, words: jax.Array,
                 mask: jax.Array, beta: jax.Array,
                 rao_blackwell: bool = True) -> GibbsResult:
-    """Run the collapsed-Gibbs E-step on a batch of documents.
+    """Run the collapsed-Gibbs E-step on a batch of documents (dense backend).
 
     words: [B, L] int32 token ids, mask: [B, L] bool, beta: [K, V].
     Returns GibbsResult with stats = mean over documents of the expected
     per-document (topic, word) count matrix (shape [K, V]).
     """
-    b, l = words.shape
-    k = config.n_topics
-    n_sweeps = config.n_gibbs
-    n_keep = n_sweeps - config.n_gibbs_burnin
-
-    k_init, k_u = jax.random.split(key)
-    uniforms = jax.random.uniform(k_u, (n_sweeps, b, l), beta.dtype)
-    z0 = jax.random.randint(k_init, (b, l), 0, k, jnp.int32)
-
-    beta_w = jnp.take(beta.T, words, axis=0)                 # [B, L, K]
-    maskf = mask.astype(beta.dtype)
-    n_dk0 = jax.vmap(
-        lambda zi, mi: (jax.nn.one_hot(zi, k) * mi[:, None]).sum(0))(z0, maskf)
-
-    def sweep(carry, inp):
-        n_dk, z = carry
-        u, collect = inp
-        n_dk, z, acc = jax.vmap(
-            _doc_sweep, in_axes=(0, 0, 0, None, 0, 0, 0, None)
-        )(words, mask, beta_w, config.alpha, n_dk, z, u, collect)
-        # accumulate sufficient statistics for this sweep:
-        if rao_blackwell:
-            contrib = acc                                     # [B, L, K]
-        else:
-            contrib = jax.nn.one_hot(z, k) * maskf[..., None]
-        return (n_dk, z), (contrib, n_dk)
-
-    collect_flags = jnp.arange(n_sweeps) >= config.n_gibbs_burnin
-    (n_dk, z), (contribs, n_dk_hist) = jax.lax.scan(
-        sweep, (n_dk0, z0), (uniforms, collect_flags))
-
-    # mean over kept sweeps, then scatter into [K, V] and mean over docs
-    keepf = collect_flags.astype(beta.dtype)
-    per_pos = jnp.einsum("s,sblk->blk", keepf, contribs) / n_keep  # [B, L, K]
-    per_pos = per_pos * maskf[..., None]
-    flat_w = words.reshape(-1)                                # [B*L]
-    flat_p = per_pos.reshape(-1, k)                           # [B*L, K]
-    stats = jnp.zeros((k, config.vocab_size), beta.dtype)
-    stats = stats.at[:, flat_w].add(flat_p.T)
-    stats = stats / b
-
-    # posterior-mean theta from kept sweeps' doc-topic counts
-    n_dk_mean = jnp.einsum("s,sbk->bk", keepf, n_dk_hist) / n_keep
-    theta = (n_dk_mean + config.alpha)
-    theta = theta / theta.sum(-1, keepdims=True)
-    return GibbsResult(stats=stats, z=z, n_dk=n_dk, theta=theta)
+    return get_estep("dense")(config, key, words, mask, beta,
+                              rao_blackwell=rao_blackwell)

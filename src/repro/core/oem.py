@@ -18,7 +18,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import gibbs as gibbs_mod
+from repro.core import estep as estep_mod
 from repro.core.lda import LDAConfig, LDAState, eta_star, init_state
 
 
@@ -46,8 +46,13 @@ def oem_update(config: LDAConfig, state: LDAState, key: jax.Array,
                words: jax.Array, mask: jax.Array,
                rho_fn: Callable[[jax.Array], jax.Array],
                estep=None) -> LDAState:
-    """One G-OEM step on a minibatch of documents (eq. 2)."""
-    estep = estep or gibbs_mod.gibbs_estep
+    """One G-OEM step on a minibatch of documents (eq. 2).
+
+    `estep` is any callable with the E-step signature — an
+    `repro.core.estep` backend (`get_estep("dense"|"pallas")`) or a
+    compatible function; defaults to the dense backend.
+    """
+    estep = estep or estep_mod.get_estep("dense")
     t = state.step + 1
     beta = eta_star(state.stats, config.tau)
     result = estep(config, key, words, mask, beta)
@@ -62,20 +67,24 @@ class OEMTrace(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("config", "n_steps", "batch_size",
-                                   "record_every", "rho_kind"))
+                                   "record_every", "rho_kind",
+                                   "estep_backend"))
 def run_oem(config: LDAConfig, key: jax.Array, words: jax.Array,
             mask: jax.Array, n_steps: int, batch_size: int,
             record_every: int = 10, rho_kind: str = "power",
-            rho_kappa: float = 0.6, rho_t0: float = 10.0) -> OEMTrace:
+            rho_kappa: float = 0.6, rho_t0: float = 10.0,
+            estep_backend: str = "dense") -> OEMTrace:
     """Run centralized G-OEM for `n_steps`, sampling `batch_size` docs
     uniformly at random per step from the corpus (paper S4 baseline).
 
     words: [D, L] int32, mask: [D, L] bool. Records stats snapshots every
     `record_every` steps (n_steps must be divisible by record_every).
+    `estep_backend` selects the E-step substrate ("dense" | "pallas").
     """
     if n_steps % record_every != 0:
         raise ValueError("n_steps must be divisible by record_every")
     rho_fn = make_rho_schedule(rho_kind, kappa=rho_kappa, t0=rho_t0)
+    estep = estep_mod.get_estep(estep_backend)
     d = words.shape[0]
     k_init, k_run = jax.random.split(key)
     state0 = init_state(config, k_init)
@@ -84,7 +93,7 @@ def run_oem(config: LDAConfig, key: jax.Array, words: jax.Array,
         k_sel, k_gibbs = jax.random.split(k)
         idx = jax.random.randint(k_sel, (batch_size,), 0, d)
         state = oem_update(config, state, k_gibbs, words[idx], mask[idx],
-                           rho_fn)
+                           rho_fn, estep=estep)
         return state, None
 
     def record_block(state, k):

@@ -7,5 +7,6 @@
 Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper) and ref.py (pure-jnp oracle used by the allclose tests).
 Kernels are written for TPU VMEM tiling and validated on CPU with
-``interpret=True``.
+``interpret=True``; ``common.resolve_interpret`` is the shared dispatch
+(``interpret=None`` -> compiled on TPU, interpreter elsewhere).
 """

@@ -1,0 +1,18 @@
+"""Shared kernel-dispatch helpers used by every Pallas kernel package."""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> auto: compile on TPU, interpreter everywhere else.
+
+    The kernels are Mosaic-lowered TPU code; off-TPU the interpreter is the
+    only thing that can run them, but defaulting to interpret=True
+    unconditionally (the old behavior) silently kept kernels OFF real
+    hardware. Tests pass an explicit value to pin the mode.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"

@@ -7,7 +7,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.gossip_mix.gossip_mix import mix_matching_pallas
+
+__all__ = ["mix_matching", "resolve_interpret"]
 
 
 def _v_block(v: int, requested: int) -> int:
@@ -16,19 +19,6 @@ def _v_block(v: int, requested: int) -> int:
         if v % cand == 0:
             return cand
     return v
-
-
-def resolve_interpret(interpret: bool | None) -> bool:
-    """None -> auto: compile on TPU, interpreter everywhere else.
-
-    The kernel is Mosaic-lowered TPU code; off-TPU the interpreter is the
-    only thing that can run it, but defaulting to interpret=True
-    unconditionally (the old behavior) silently kept the kernel OFF real
-    hardware. Tests pass an explicit value to pin the mode.
-    """
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
 
 
 @partial(jax.jit, static_argnames=("block_v", "interpret"))

@@ -1,8 +1,10 @@
 """Public jit'd wrapper for the lda_gibbs Pallas kernel.
 
 `gibbs_estep` is a drop-in replacement for `repro.core.gibbs.gibbs_estep`
-(same signature, same PRNG stream, same GibbsResult) so DeledaConfig can
-flip between the pure-jnp E-step and the kernel with `use_pallas=True`.
+(same signature, same PRNG stream, same GibbsResult): both are thin entry
+points into the unified E-step layer (`repro.core.estep`), this one pinned
+to the `"pallas"` backend. `interpret=None` auto-detects — compiled on TPU,
+interpreter elsewhere (kernels/common.resolve_interpret).
 """
 
 from __future__ import annotations
@@ -12,8 +14,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.gibbs import GibbsResult
+from repro.core import estep as estep_mod
+from repro.core.estep import GibbsResult
 from repro.core.lda import LDAConfig
+from repro.kernels.common import resolve_interpret
 from repro.kernels.lda_gibbs.lda_gibbs import gibbs_sweeps_pallas
 from repro.kernels.lda_gibbs import ref as ref_mod
 
@@ -31,7 +35,7 @@ def _pad_to(x: jax.Array, b_pad: int, axis: int, fill=0):
                                    "block_docs", "interpret"))
 def gibbs_sweeps(beta_w: jax.Array, maskf: jax.Array, uniforms: jax.Array,
                  z0: jax.Array, *, alpha: float, n_sweeps: int, burnin: int,
-                 block_docs: int = 8, interpret: bool = True):
+                 block_docs: int = 8, interpret: bool | None = None):
     """Padded pallas_call: accepts any B, pads to a block multiple."""
     b = beta_w.shape[0]
     b_pad = -(-b // block_docs) * block_docs
@@ -41,7 +45,7 @@ def gibbs_sweeps(beta_w: jax.Array, maskf: jax.Array, uniforms: jax.Array,
         _pad_to(uniforms, b_pad, 1, fill=0.5),
         _pad_to(z0, b_pad, 0),
         alpha=alpha, n_sweeps=n_sweeps, burnin=burnin,
-        block_docs=block_docs, interpret=interpret)
+        block_docs=block_docs, interpret=resolve_interpret(interpret))
     return per_pos[:b], z[:b], ndk[:b]
 
 
@@ -50,37 +54,16 @@ def gibbs_sweeps(beta_w: jax.Array, maskf: jax.Array, uniforms: jax.Array,
 def gibbs_estep(config: LDAConfig, key: jax.Array, words: jax.Array,
                 mask: jax.Array, beta: jax.Array,
                 rao_blackwell: bool = True, block_docs: int = 8,
-                interpret: bool = True) -> GibbsResult:
-    """Kernel-backed E-step; PRNG-stream-compatible with core.gibbs."""
-    if not rao_blackwell:
-        raise NotImplementedError("kernel E-step is Rao-Blackwellized only")
-    b, l = words.shape
-    k = config.n_topics
+                interpret: bool | None = None) -> GibbsResult:
+    """Kernel-backed E-step; PRNG-stream-compatible with core.gibbs.
 
-    # identical stream to core.gibbs.gibbs_estep:
-    k_init, k_u = jax.random.split(key)
-    uniforms = jax.random.uniform(k_u, (config.n_gibbs, b, l), beta.dtype)
-    z0 = jax.random.randint(k_init, (b, l), 0, k, jnp.int32)
-
-    beta_w = jnp.take(beta.T, words, axis=0)                  # [B, L, K]
-    maskf = mask.astype(beta.dtype)
-
-    per_pos, z, ndk_mean = gibbs_sweeps(
-        beta_w, maskf, uniforms, z0, alpha=config.alpha,
-        n_sweeps=config.n_gibbs, burnin=config.n_gibbs_burnin,
-        block_docs=block_docs, interpret=interpret)
-
-    flat_w = words.reshape(-1)
-    flat_p = per_pos.reshape(-1, k)
-    stats = jnp.zeros((k, config.vocab_size), beta.dtype)
-    stats = stats.at[:, flat_w].add(flat_p.T) / b
-
-    # final n_dk recomputed from z (matches GibbsResult contract)
-    n_dk = jnp.einsum("blk,bl->bk",
-                      jax.nn.one_hot(z, k, dtype=beta.dtype), maskf)
-    theta = ndk_mean + config.alpha
-    theta = theta / theta.sum(-1, keepdims=True)
-    return GibbsResult(stats=stats, z=z, n_dk=n_dk, theta=theta)
+    With rao_blackwell=False the kernel cannot run (it is Rao-Blackwellized
+    only); the E-step layer falls back to the dense backend with a warning.
+    """
+    backend = estep_mod.PallasEStep(block_docs=block_docs,
+                                    interpret=interpret)
+    return backend(config, key, words, mask, beta,
+                   rao_blackwell=rao_blackwell)
 
 
 def gibbs_sweeps_reference(beta_w, maskf, uniforms, z0, *, alpha, n_sweeps,

@@ -2,15 +2,16 @@
 
 Bit-compatible semantics: consumes the same pre-drawn uniforms and initial
 assignments, performs the same sweep/position loop in the same order with
-the same float ops. Used by the allclose tests and as the interpret-mode
-reference; also exercised indirectly because core/gibbs.py implements the
-identical update (the three implementations must agree).
+the same float ops. Since the EStep-layer refactor this is literally the
+shared sweep core (`repro.core.estep.gibbs_sweeps_dense`) — the kernel, the
+training E-step and the evaluator all exercise ONE implementation.
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
+
+from repro.core.estep import gibbs_sweeps_dense
 
 
 def gibbs_sweeps_ref(beta_w: jax.Array, maskf: jax.Array,
@@ -22,45 +23,5 @@ def gibbs_sweeps_ref(beta_w: jax.Array, maskf: jax.Array,
     beta_w [B, L, K], maskf [B, L] f32, uniforms [S, B, L], z0 [B, L] i32.
     Returns (per_pos [B,L,K], z [B,L], ndk_mean [B,K]).
     """
-    b, l, k = beta_w.shape
-    n_keep = n_sweeps - burnin
-
-    def one_hot(z):
-        return (z[..., None] == jnp.arange(k)[None, :]).astype(beta_w.dtype)
-
-    n_dk0 = jnp.einsum("blk,bl->bk", one_hot(z0.reshape(b, l)).reshape(b, l, k),
-                       maskf)
-
-    def position(i, carry, s):
-        z, n_dk, acc = carry
-        m = maskf[:, i]
-        zi = z[:, i]
-        bw = beta_w[:, i]
-        u = uniforms[s, :, i]
-        n_dk = n_dk - m[:, None] * one_hot(zi)
-        probs = (n_dk + alpha) * bw
-        cum = jnp.cumsum(probs, axis=-1)
-        new_z = jnp.sum(cum < u[:, None] * cum[:, -1:], axis=-1).astype(
-            jnp.int32)
-        new_z = jnp.where(m > 0, new_z, zi)
-        n_dk = n_dk + m[:, None] * one_hot(new_z)
-        post = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
-        collect = jnp.asarray(s >= burnin, post.dtype)
-        acc = acc.at[:, i].add(collect * m[:, None] * post)
-        z = z.at[:, i].set(new_z)
-        return z, n_dk, acc
-
-    def sweep(carry, s):
-        z, n_dk, acc, ndk_acc = carry
-        z, n_dk, acc = jax.lax.fori_loop(
-            0, l, lambda i, c: position(i, c, s), (z, n_dk, acc))
-        keep = jnp.asarray(s >= burnin, n_dk.dtype)
-        return (z, n_dk, acc, ndk_acc + keep * n_dk), None
-
-    acc0 = jnp.zeros((b, l, k), beta_w.dtype)
-    ndk0 = jnp.zeros((b, k), beta_w.dtype)
-    (z, n_dk, acc, ndk_acc), _ = jax.lax.scan(
-        sweep, (z0, n_dk0, acc0, ndk0), jnp.arange(n_sweeps))
-
-    per_pos = acc / n_keep * maskf[..., None]
-    return per_pos, z, ndk_acc / n_keep
+    return gibbs_sweeps_dense(beta_w, maskf, uniforms, z0, alpha=alpha,
+                              n_sweeps=n_sweeps, burnin=burnin)

@@ -37,19 +37,21 @@ from repro.core.comm import GossipSchedule, MeshComm
 from repro.core.graph import complete_graph, watts_strogatz_graph
 from repro.core.lda import LDAConfig, beta_distance, eta_star, init_stats
 from repro.core.oem import make_rho_schedule
-from repro.core import gibbs as gibbs_mod
+from repro.core import estep as estep_mod
 from repro.data.lda_synthetic import CorpusSpec, make_corpus
 from repro.launch.mesh import make_host_mesh
 
 
 def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     batch_size: int, seed: int = 0, mesh=None,
-                    schedule: GossipSchedule | None = None):
+                    schedule: GossipSchedule | None = None,
+                    estep_backend: str = "dense"):
     """words/mask [n, D, L] node-sharded over the mesh "data" axis.
 
     Returns (stats [n, K, V], consensus trace, wall seconds). The gossip
     path is pure MeshComm ppermute routing; the local-update step contains
-    no collectives at all.
+    no collectives at all — each device runs ONE fused E-step over all of
+    its local nodes' minibatches (`repro.core.estep.estep_batch`).
     """
     mesh = mesh or make_host_mesh()
     n = words.shape[0]
@@ -60,6 +62,7 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         schedule = GossipSchedule.draw_matchings(graph, n_steps, rng)
     partners = schedule.partners()                       # [T, n]
     rho_fn = make_rho_schedule("power")
+    estep = estep_mod.get_estep(estep_backend)
 
     node = P("data")
     sharding = NamedSharding(mesh, node)
@@ -70,26 +73,27 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         jax.random.split(jax.random.key(seed), n))
     stats0 = jax.device_put(stats0, sharding)
 
-    def local_update(stats, step, key, node_words, node_mask):
-        k_sel, k_gibbs = jax.random.split(key)
-        idx = jax.random.randint(k_sel, (batch_size,), 0,
-                                 node_words.shape[0])
-        beta = eta_star(stats, lda.tau)
-        result = gibbs_mod.gibbs_estep(lda, k_gibbs, node_words[idx],
-                                       node_mask[idx], beta)
-        rho = rho_fn(step + 1).astype(stats.dtype)
-        return (1 - rho) * stats + rho * result.stats
-
     def update_fn(stats, steps, key, w, m):
         # stats [n_local, K, V]; pure local G-OEM — NO collectives here,
-        # gossip already happened via MeshComm outside this jit.
+        # gossip already happened via MeshComm outside this jit. All of
+        # the device's nodes run as ONE fused [n_local*B, L] E-step call.
         n_local = stats.shape[0]
         dev = jax.lax.axis_index("data")
         key = jax.random.fold_in(key, dev)   # per-device stream (varying)
-        keys = jax.random.split(key, n_local)
-        stats = jax.vmap(local_update, in_axes=(0, 0, 0, 0, 0))(
-            stats, steps, keys, w, m)
-        return stats, steps + 1
+        ks = jax.vmap(jax.random.split)(jax.random.split(key, n_local))
+        k_sel, k_gibbs = ks[:, 0], ks[:, 1]  # [n_local] each
+
+        def select(k, node_words, node_mask):
+            idx = jax.random.randint(k, (batch_size,), 0,
+                                     node_words.shape[0])
+            return node_words[idx], node_mask[idx]
+
+        bw, bm = jax.vmap(select)(k_sel, w, m)          # [n_local, B, L]
+        beta = eta_star(stats, lda.tau)                 # [n_local, K, V]
+        stats_hat = estep_mod.estep_batch(estep, lda, k_gibbs, bw, bm,
+                                          beta)
+        rho = rho_fn(steps + 1).astype(stats.dtype)[:, None, None]
+        return (1 - rho) * stats + rho * stats_hat, steps + 1
 
     shmap = compat.shard_map(
         update_fn, mesh=mesh,
@@ -122,6 +126,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=5)
     ap.add_argument("--docs-per-node", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--estep-backend", default="dense",
+                    choices=list(estep_mod.ESTEP_BACKENDS))
     args = ap.parse_args(argv)
 
     lda = LDAConfig(n_topics=PAPER.lda.n_topics,
@@ -138,7 +144,7 @@ def main(argv=None):
 
     stats, consensus, sec = run_mesh_deleda(
         lda, corpus.words, corpus.mask, graph, args.steps, args.batch,
-        args.seed)
+        args.seed, estep_backend=args.estep_backend)
     d = float(beta_distance(eta_star(stats[0]), corpus.beta_star))
     print(f"{args.steps} steps in {sec:.1f}s | consensus {consensus} "
           f"| D(beta, beta*) node0 = {d:.4f}")

@@ -1,0 +1,218 @@
+"""Unified E-step layer: registry, backend equivalence, fused batch path.
+
+The contract under test (the compute-side twin of tests/test_comm.py):
+DenseEStep (pure-jnp shared sweep core) and PallasEStep (lda_gibbs kernel,
+interpret mode off-TPU) implement the SAME E-step for the same PRNG stream,
+and the fused multi-node batch path (`estep_batch`) is bit-identical to
+vmapping the single-node E-step with the same fold_in key streams.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import deleda, estep
+from repro.core import gibbs as core_gibbs
+from repro.core.graph import complete_graph
+from repro.core.lda import LDAConfig, eta_star
+from repro.core.oem import run_oem
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+CFG = LDAConfig(n_topics=4, vocab_size=40, alpha=0.5, doc_len_max=16,
+                n_gibbs=6, n_gibbs_burnin=3)
+
+
+@pytest.fixture(scope="module")
+def doc_batch():
+    words = jax.random.randint(jax.random.key(1), (10, 16), 0,
+                               CFG.vocab_size)
+    mask = jax.random.uniform(jax.random.key(2), (10, 16)) < 0.9
+    beta = eta_star(jax.random.uniform(jax.random.key(3),
+                                       (CFG.n_topics, CFG.vocab_size)))
+    return words, mask, beta
+
+
+@pytest.fixture(scope="module")
+def node_batch():
+    """Per-node inputs for the fused path: [A, B, L] docs, [A, K, V] betas."""
+    a, b = 5, 4
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(9), i))(
+        jnp.arange(a))
+    words = jax.random.randint(jax.random.key(4), (a, b, 16), 0,
+                               CFG.vocab_size)
+    mask = jax.random.uniform(jax.random.key(5), (a, b, 16)) < 0.9
+    beta = eta_star(jax.random.uniform(jax.random.key(6),
+                                       (a, CFG.n_topics, CFG.vocab_size)))
+    return keys, words, mask, beta
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_and_validation():
+    assert estep.get_estep("dense").name == "dense"
+    assert estep.get_estep("pallas").name == "pallas"
+    assert estep.ESTEP_BACKENDS == ("dense", "pallas")
+    with pytest.raises(ValueError):
+        estep.get_estep("carrier-pigeon")
+    with pytest.raises(ValueError):
+        deleda.DeledaConfig(lda=CFG, estep_backend="carrier-pigeon")
+
+
+def test_use_pallas_is_deprecated_alias():
+    with pytest.warns(DeprecationWarning):
+        cfg = deleda.DeledaConfig(lda=CFG, use_pallas=True)
+    assert cfg.estep_backend == "pallas"
+    with pytest.warns(DeprecationWarning):
+        cfg = deleda.DeledaConfig(lda=CFG, use_pallas=True,
+                                  estep_backend="pallas")
+    assert cfg.estep_backend == "pallas"
+
+
+def test_interpret_autodetect_shared():
+    from repro.kernels.common import resolve_interpret
+    from repro.kernels.gossip_mix import ops as gossip_ops
+    assert gossip_ops.resolve_interpret is resolve_interpret
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    assert resolve_interpret(None) is (jax.default_backend() != "tpu")
+
+
+# ---------------------------------------------------------------------------
+# Backend equivalence (single-node E-step)
+# ---------------------------------------------------------------------------
+
+def test_gibbs_estep_wrapper_and_legacy_trajectory(doc_batch):
+    """core.gibbs.gibbs_estep is plumbing over the dense backend (same jit
+    path, same defaults), and the dense backend still reproduces the
+    pre-EStep-refactor sampler: the golden values below were produced by
+    the original core/gibbs.py implementation on this exact input."""
+    words, mask, beta = doc_batch
+    key = jax.random.key(7)
+    r_api = core_gibbs.gibbs_estep(CFG, key, words, mask, beta)
+    r_backend = jax.jit(
+        lambda k, w, m, b: estep.get_estep("dense")(CFG, k, w, m, b))(
+            key, words, mask, beta)
+    for name in r_api._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_api, name)),
+            np.asarray(getattr(r_backend, name)), err_msg=name)
+    # legacy-trajectory pin (catches semantic drift in the shared core)
+    np.testing.assert_allclose(float(r_api.stats.sum()), 14.3000011,
+                               atol=1e-5)
+    np.testing.assert_allclose(float(r_api.stats[0, 7]), 0.17296986,
+                               atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(r_api.theta[3]),
+        [0.51041669, 0.03125, 0.05208334, 0.40625], atol=1e-6)
+    assert int(np.asarray(r_api.z).sum()) == 190
+    assert float(r_api.n_dk.sum()) == 143.0
+
+
+@pytest.mark.parametrize("rao_blackwell", [True, False])
+def test_pallas_backend_matches_dense(doc_batch, rao_blackwell):
+    words, mask, beta = doc_batch
+    key = jax.random.key(8)
+    r_d = estep.get_estep("dense")(CFG, key, words, mask, beta,
+                                   rao_blackwell=rao_blackwell)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")   # non-RB fallback warns, see below
+        r_p = estep.get_estep("pallas")(CFG, key, words, mask, beta,
+                                        rao_blackwell=rao_blackwell)
+    np.testing.assert_array_equal(np.asarray(r_p.z), np.asarray(r_d.z))
+    for name in ("stats", "n_dk", "theta"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(r_p, name)), np.asarray(getattr(r_d, name)),
+            atol=1e-6, err_msg=name)
+
+
+def test_pallas_non_rao_blackwell_falls_back_with_warning(doc_batch):
+    words, mask, beta = doc_batch
+    backend = estep.PallasEStep()
+    with pytest.warns(UserWarning, match="Rao-Blackwell"):
+        r = backend(CFG, jax.random.key(0), words, mask, beta,
+                    rao_blackwell=False)
+    r_d = estep.get_estep("dense")(CFG, jax.random.key(0), words, mask,
+                                   beta, rao_blackwell=False)
+    np.testing.assert_array_equal(np.asarray(r.stats),
+                                  np.asarray(r_d.stats))
+
+
+# ---------------------------------------------------------------------------
+# Fused batch path
+# ---------------------------------------------------------------------------
+
+def test_fused_batch_bit_identical_to_per_node_vmap(node_batch):
+    """The acceptance property: gathering all awake nodes into ONE [A*B, L]
+    sweep call changes nothing — same fold_in streams, same bits."""
+    keys, words, mask, beta = node_batch
+    backend = estep.get_estep("dense")
+    fused = estep.estep_batch(backend, CFG, keys, words, mask, beta)
+    per_node = jax.vmap(
+        lambda k, w, m, b: backend(CFG, k, w, m, b).stats)(
+            keys, words, mask, beta)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(per_node))
+
+
+def test_fused_batch_pallas_matches_dense(node_batch):
+    keys, words, mask, beta = node_batch
+    fused_d = estep.estep_batch(estep.get_estep("dense"), CFG, keys, words,
+                                mask, beta)
+    fused_p = estep.estep_batch(estep.get_estep("pallas"), CFG, keys,
+                                words, mask, beta)
+    np.testing.assert_allclose(np.asarray(fused_p), np.asarray(fused_d),
+                               atol=1e-6)
+
+
+def test_fused_batch_independent_of_batch_mates(node_batch):
+    """A node's statistics depend only on its own key/docs/beta — not on
+    which (or how many) nodes share the fused batch."""
+    keys, words, mask, beta = node_batch
+    backend = estep.get_estep("dense")
+    full = estep.estep_batch(backend, CFG, keys, words, mask, beta)
+    pair = estep.estep_batch(backend, CFG, keys[1:3], words[1:3],
+                             mask[1:3], beta[1:3])
+    np.testing.assert_array_equal(np.asarray(full[1:3]), np.asarray(pair))
+
+
+# ---------------------------------------------------------------------------
+# run_deleda / run_oem through the layer
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CFG, jax.random.key(0),
+                       CorpusSpec(n_nodes=8, docs_per_node=8, n_test=10))
+
+
+def test_run_deleda_estep_backends_agree(corpus):
+    g = complete_graph(8)
+    sched, degs = deleda.make_run_inputs(g, 10, seed=1, kind="matching")
+    traces = {}
+    for backend in estep.ESTEP_BACKENDS:
+        cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=4,
+                                  estep_backend=backend)
+        traces[backend] = deleda.run_deleda(
+            cfg, jax.random.key(2), corpus.words, corpus.mask, sched, degs,
+            10, record_every=10)
+    np.testing.assert_array_equal(np.asarray(traces["dense"].steps),
+                                  np.asarray(traces["pallas"].steps))
+    np.testing.assert_allclose(np.asarray(traces["dense"].stats),
+                               np.asarray(traces["pallas"].stats),
+                               atol=1e-5)
+
+
+def test_run_oem_estep_backends_agree(corpus):
+    traces = {}
+    for backend in estep.ESTEP_BACKENDS:
+        traces[backend] = run_oem(CFG, jax.random.key(3),
+                                  corpus.flat_words, corpus.flat_mask,
+                                  n_steps=10, batch_size=6,
+                                  record_every=10, estep_backend=backend)
+    np.testing.assert_allclose(np.asarray(traces["dense"].state.stats),
+                               np.asarray(traces["pallas"].state.stats),
+                               atol=1e-5)
