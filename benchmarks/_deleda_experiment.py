@@ -26,6 +26,7 @@ from repro.core.evaluation import log_perplexity
 from repro.core.graph import complete_graph, watts_strogatz_graph
 from repro.core.lda import LDAConfig, beta_distance, eta_star
 from repro.core.oem import run_oem
+from repro.core.scenario import SCENARIO_NAMES, paper_scenario
 from repro.data.lda_synthetic import CorpusSpec, make_corpus
 
 
@@ -54,8 +55,44 @@ PAPER = ExperimentScale(
     n_steps=400, record_every=40, batch_size=20, ws_k=4, n_particles=10)
 
 
+# scenario benchmarks keep the paper's n=50/V=100/K=5 shape but fewer Gibbs
+# sweeps per E-step — the comparison is ACROSS network regimes at fixed
+# compute, not against the paper's absolute numbers
+SCENARIO_PAPER = ExperimentScale(
+    lda=LDAConfig(n_topics=5, vocab_size=100, alpha=0.5, doc_len_max=32,
+                  n_gibbs=10, n_gibbs_burnin=5),
+    corpus=CorpusSpec(n_nodes=50, docs_per_node=20, n_test=50),
+    n_steps=300, record_every=50, batch_size=10, ws_k=4, n_particles=5)
+
+SCENARIO_SMOKE = ExperimentScale(
+    lda=LDAConfig(n_topics=3, vocab_size=24, alpha=0.5, doc_len_max=12,
+                  n_gibbs=4, n_gibbs_burnin=2),
+    corpus=CorpusSpec(n_nodes=10, docs_per_node=4, n_test=8),
+    n_steps=20, record_every=10, batch_size=2, ws_k=4, n_particles=2)
+
+
 def get_scale(name: str) -> ExperimentScale:
-    return {"reduced": REDUCED, "paper": PAPER}[name]
+    return {"reduced": REDUCED, "paper": PAPER,
+            "scenario_paper": SCENARIO_PAPER,
+            "scenario_smoke": SCENARIO_SMOKE}[name]
+
+
+def make_beta_evaluator(scale: ExperimentScale, corpus, seed: int):
+    """(eval_beta, lp_star): per-stats (rel_perplexity, beta_distance)."""
+    k_eval = jax.random.key(seed + 1)
+    lp_star = float(log_perplexity(k_eval, corpus.test_words,
+                                   corpus.test_mask, corpus.beta_star,
+                                   scale.lda.alpha, scale.n_particles))
+
+    def eval_beta(stats) -> tuple[float, float]:
+        beta = eta_star(stats, scale.lda.tau)
+        lp = float(log_perplexity(k_eval, corpus.test_words,
+                                  corpus.test_mask, beta, scale.lda.alpha,
+                                  scale.n_particles))
+        return lp / lp_star - 1.0, float(beta_distance(beta,
+                                                       corpus.beta_star))
+
+    return eval_beta, lp_star
 
 
 def run_experiment(scale: ExperimentScale, seed: int = 0,
@@ -74,18 +111,7 @@ def run_experiment(scale: ExperimentScale, seed: int = 0,
             n, scale.ws_k, 0.3, seed=seed)
 
     # ---- reference perplexity under the generating parameters
-    k_eval = jax.random.key(seed + 1)
-    lp_star = float(log_perplexity(k_eval, corpus.test_words,
-                                   corpus.test_mask, corpus.beta_star,
-                                   scale.lda.alpha, scale.n_particles))
-
-    def eval_beta(stats) -> tuple[float, float]:
-        beta = eta_star(stats, scale.lda.tau)
-        lp = float(log_perplexity(k_eval, corpus.test_words,
-                                  corpus.test_mask, beta, scale.lda.alpha,
-                                  scale.n_particles))
-        return lp / lp_star - 1.0, float(beta_distance(beta,
-                                                       corpus.beta_star))
+    eval_beta, lp_star = make_beta_evaluator(scale, corpus, seed)
 
     results = {"lp_star": lp_star, "runs": {}, "lambda2": {},
                "iterations": []}
@@ -139,4 +165,74 @@ def run_experiment(scale: ExperimentScale, seed: int = 0,
     results["iterations"] = list(range(scale.record_every,
                                        scale.n_steps + 1,
                                        scale.record_every))
+    return results
+
+
+def run_scenario_experiment(scale: ExperimentScale,
+                            scenario_names=SCENARIO_NAMES, seed: int = 0,
+                            verbose: bool = True) -> dict:
+    """DELEDA across dynamic-network regimes (core/scenario.py).
+
+    Runs the async variant under each named scenario on one corpus family
+    (same beta*, same held-out test set — the noniid regime re-biases only
+    the training shards) and reports per-scenario final metrics plus the
+    LP ratio against the static-graph baseline. All runs share the SAME
+    jitted ``run_deleda`` trace: schedules/alive masks are data, so the
+    whole sweep costs one compilation (the scenario layer's core claim).
+    """
+    n = scale.corpus.n_nodes
+    base_corpus = make_corpus(scale.lda, jax.random.key(seed), scale.corpus)
+    eval_beta, lp_star = make_beta_evaluator(scale, base_corpus, seed)
+    results = {"lp_star": lp_star, "n_steps": scale.n_steps,
+               "n_nodes": n, "runs": {}}
+
+    for name in scenario_names:
+        sc = paper_scenario(name, n=n, n_steps=scale.n_steps, seed=seed,
+                            ws_k=scale.ws_k)
+        if sc.topic_skew is None:
+            corpus = base_corpus
+        else:
+            corpus = make_corpus(
+                scale.lda, jax.random.key(seed),
+                dataclasses.replace(scale.corpus,
+                                    topic_skew=sc.topic_skew))
+            # same key => same beta*/test set; only the shards re-bias
+            np.testing.assert_array_equal(np.asarray(corpus.test_words),
+                                          np.asarray(base_corpus.test_words))
+        compiled = sc.compile(np.random.default_rng(seed + 17))
+        sched, degs, alive = compiled.run_inputs()
+        cfg = deleda.DeledaConfig(lda=scale.lda, mode="async",
+                                  batch_size=scale.batch_size)
+        t0 = time.time()
+        trace = deleda.run_deleda(cfg, jax.random.key(seed + 3),
+                                  corpus.words, corpus.mask, sched, degs,
+                                  scale.n_steps, scale.record_every,
+                                  alive=alive)
+        jax.block_until_ready(trace.stats)
+        wall = time.time() - t0
+        vals = [eval_beta(trace.stats[i]) for i in range(scale.probe_nodes)]
+        rel = float(np.mean([v[0] for v in vals]))
+        dist = float(np.mean([v[1] for v in vals]))
+        results["runs"][name] = {
+            "rel_perplexity": rel,
+            "beta_distance": dist,
+            "consensus": [float(c) for c in trace.consensus],
+            "wall_sec": wall,
+            "mean_steps_per_node": float(np.asarray(trace.steps).mean()),
+            "events": {"drawn": compiled.n_events,
+                       "dropped": compiled.n_dropped,
+                       "churned": compiled.n_churned},
+            "n_segments": compiled.schedule.n_segments,
+        }
+        if verbose:
+            print(f"  {name:>9s}: {wall:6.1f}s  rel={rel:+.4f} "
+                  f"D={dist:.4f} events={compiled.n_events} "
+                  f"dropped={compiled.n_dropped} "
+                  f"churned={compiled.n_churned}")
+
+    if "static" in results["runs"]:
+        lp_static = (1.0 + results["runs"]["static"]["rel_perplexity"])
+        for name, run in results["runs"].items():
+            run["lp_ratio_vs_static"] = (
+                (1.0 + run["rel_perplexity"]) / lp_static - 1.0)
     return results

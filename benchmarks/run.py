@@ -63,6 +63,14 @@ def main(argv=None):
     sections.append("estep")
 
     print("=" * 72)
+    print("scenarios: dynamic-network regimes (rewiring/drops/churn/non-IID)")
+    print("=" * 72)
+    from benchmarks import scenario_bench
+    scenario_bench.main(["--scale",
+                         "paper" if args.scale == "paper" else "smoke"])
+    sections.append("scenarios")
+
+    print("=" * 72)
     print("gossip vs all-reduce collective bytes (model)")
     print("=" * 72)
     from benchmarks import gossip_collectives

@@ -1,0 +1,76 @@
+"""Scenario benchmark: DELEDA convergence + wall-time across network regimes.
+
+Sweeps the named dynamic-network scenarios of `repro.core.scenario`
+({static, rewiring, 10%-drop, 20%-churn, non-IID shards}) at paper scale
+(n=50 Watts-Strogatz, V=100, K=5) and writes BENCH_scenarios.json with
+per-scenario final relative perplexity, beta distance, consensus trace,
+wall seconds and event-masking counts.
+
+The acceptance line this file defends: the rewiring and 10%-drop regimes
+land within 10% relative perplexity of the static-graph baseline
+(``lp_ratio_vs_static``), and the whole sweep runs through ONE jitted
+``run_deleda`` trace — time-varying schedules, drop masks and churn masks
+are data, not new programs (`run_deleda._cache_size() == 1`, also asserted
+in tests/test_scenario.py).
+
+Usage: PYTHONPATH=src python -m benchmarks.scenario_bench [--scale smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks._deleda_experiment import (get_scale,  # noqa: E402
+                                           run_scenario_experiment)
+
+# |LP_scenario / LP_static - 1| bound for the degraded-but-connected
+# regimes (drop10, rewiring); churn/noniid are reported, not gated
+ACCEPT_RATIO = 0.10
+GATED = ("rewiring", "drop10")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="paper", choices=["paper", "smoke"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("-o", "--out", default="BENCH_scenarios.json")
+    args = ap.parse_args(argv)
+
+    from repro.core import deleda
+    scale = get_scale(f"scenario_{args.scale}")
+    # delta, not absolute: other benchmark sections (benchmarks/run.py)
+    # may already have compiled run_deleda with different shapes/configs
+    cache_before = deleda.run_deleda._cache_size()
+    res = run_scenario_experiment(scale, seed=args.seed)
+    res["scale"] = args.scale
+
+    # the whole sweep must have hit ONE compiled trace: same shapes, same
+    # static config -> schedules/alive masks are data, not new programs
+    n_traces = deleda.run_deleda._cache_size() - cache_before
+    res["run_deleda_compilations"] = n_traces
+    print(f"\nrun_deleda compilations for the whole sweep: {n_traces}")
+
+    ok = True
+    if args.scale == "paper":
+        for name in GATED:
+            ratio = res["runs"][name]["lp_ratio_vs_static"]
+            passed = abs(ratio) <= ACCEPT_RATIO
+            ok &= passed
+            print(f"  {name:>9s}: LP ratio vs static {ratio:+.4f} "
+                  f"({'OK' if passed else 'FAIL'} @ {ACCEPT_RATIO:.0%})")
+        ok &= n_traces <= 1          # 0 = full cache hit from a prior run
+    res["accept"] = bool(ok)
+
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out} (accept={res['accept']})")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

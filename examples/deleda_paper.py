@@ -1,17 +1,25 @@
-"""Reproduce the paper's §4 experiment (Fig 1a + 1b).
+"""Reproduce the paper's §4 experiment (Fig 1a + 1b) — plus dynamic networks.
 
 Runs centralized G-OEM and DELEDA {sync, async} x {complete,
 Watts-Strogatz} and prints both paper metrics per checkpoint. Reduced
 scale by default (~minutes on CPU); --scale paper is the exact n=50 setup.
 
+With --scenario, runs the dynamic-network regimes the paper motivates but
+never simulates (core/scenario.py): time-varying rewired graphs, gossip
+message drops, node churn, and topically-skewed non-IID shards.
+
   PYTHONPATH=src python examples/deleda_paper.py [--scale paper]
+  PYTHONPATH=src python examples/deleda_paper.py --scenario all
+  PYTHONPATH=src python examples/deleda_paper.py --scenario drop10
 """
 
 import argparse
 import sys
 
 sys.path.insert(0, ".")
-from benchmarks._deleda_experiment import get_scale, run_experiment  # noqa
+from benchmarks._deleda_experiment import (get_scale, run_experiment,  # noqa
+                                           run_scenario_experiment)
+from repro.core.scenario import SCENARIO_NAMES  # noqa: E402
 
 
 def main():
@@ -19,7 +27,30 @@ def main():
     ap.add_argument("--scale", default="reduced",
                     choices=["reduced", "paper"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None,
+                    choices=["all", *SCENARIO_NAMES],
+                    help="run a dynamic-network scenario sweep instead of "
+                         "the static Fig-1 reproduction")
     args = ap.parse_args()
+
+    if args.scenario is not None:
+        names = SCENARIO_NAMES if args.scenario == "all" \
+            else (("static", args.scenario) if args.scenario != "static"
+                  else ("static",))
+        scale = get_scale("scenario_paper" if args.scale == "paper"
+                          else "scenario_smoke")
+        res = run_scenario_experiment(scale, scenario_names=names,
+                                      seed=args.seed)
+        print("\n=== scenario sweep: final metrics ===")
+        print(f"{'scenario':>10s} {'rel_perp':>9s} {'D(beta)':>8s} "
+              f"{'vs static':>9s} {'wall_s':>7s}")
+        for name, run in res["runs"].items():
+            ratio = run.get("lp_ratio_vs_static")
+            print(f"{name:>10s} {run['rel_perplexity']:>+9.4f} "
+                  f"{run['beta_distance']:>8.4f} "
+                  f"{(f'{ratio:+.4f}' if ratio is not None else '—'):>9s} "
+                  f"{run['wall_sec']:>7.1f}")
+        return
 
     res = run_experiment(get_scale(args.scale), seed=args.seed)
 

@@ -12,15 +12,20 @@ Layout:
   deleda.py         Algorithm 1 (sync) + async variant + consensus diagnostics
   decentralized.py  gossip sync for arbitrary pytrees (the generalization)
   evaluation.py     left-to-right held-out perplexity (Wallach et al. 2009)
+  scenario.py       dynamic-network scenarios: time-varying graphs, message
+                    drops, node churn, non-IID shards — all as schedule data
 """
 
 from repro.core.lda import (LDAConfig, LDAState, beta_distance, eta_star,
                             init_state, init_stats)
 from repro.core.deleda import DeledaConfig, DeledaTrace, run_deleda
 from repro.core.decentralized import SyncSpec, parse_sync
+from repro.core.scenario import (CompiledScenario, GraphSequence, Scenario,
+                                 paper_scenario)
 
 __all__ = [
     "LDAConfig", "LDAState", "beta_distance", "eta_star", "init_state",
     "init_stats", "DeledaConfig", "DeledaTrace", "run_deleda", "SyncSpec",
-    "parse_sync",
+    "parse_sync", "CompiledScenario", "GraphSequence", "Scenario",
+    "paper_scenario",
 ]

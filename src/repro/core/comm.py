@@ -67,11 +67,18 @@ class GossipSchedule:
     ``kind == "edge"``:     data is [T, 2] int32 activated edges.
     ``kind == "matching"``: data is [T, n] int32 partner vectors
                             (involutions: p[p[i]] == i, self-partner = idle).
+
+    ``segments`` is the optional segment axis for time-varying topologies
+    (core/scenario.py): [T] int32 ids recording which
+    :class:`~repro.core.scenario.GraphSequence` segment each round was
+    drawn from. Pure metadata — the consumers scan ``data`` unchanged, so a
+    time-varying schedule compiles exactly once, like a static one.
     """
 
     kind: str
     data: np.ndarray
     n_nodes: int
+    segments: np.ndarray | None = None
 
     def __post_init__(self):
         d = np.asarray(self.data, np.int32)
@@ -91,10 +98,20 @@ class GossipSchedule:
         if len(d) and (d.min() < 0 or d.max() >= self.n_nodes):
             raise ValueError("schedule references node out of range")
         object.__setattr__(self, "data", d)
+        if self.segments is not None:
+            seg = np.asarray(self.segments, np.int32)
+            if seg.shape != (len(d),):
+                raise ValueError(f"segments must be [T={len(d)}], "
+                                 f"got {seg.shape}")
+            object.__setattr__(self, "segments", seg)
 
     @property
     def n_rounds(self) -> int:
         return len(self.data)
+
+    @property
+    def n_segments(self) -> int:
+        return 1 if self.segments is None else int(self.segments.max()) + 1
 
     # -- constructors --------------------------------------------------------
 
@@ -144,7 +161,8 @@ class GossipSchedule:
         rows = np.arange(t)
         p[rows, self.data[:, 0]] = self.data[:, 1]
         p[rows, self.data[:, 1]] = self.data[:, 0]
-        return GossipSchedule(MATCHING, p, self.n_nodes)
+        return GossipSchedule(MATCHING, p, self.n_nodes,
+                              segments=self.segments)
 
     def partners(self) -> np.ndarray:
         """[T, n] partner matrix (converting edges if necessary)."""

@@ -34,6 +34,16 @@ bit-identical to per-node E-step calls (tests/test_estep.py).
 The whole trajectory (schedule pre-drawn host-side) folds into a single
 ``lax.scan`` — one jit compilation, reproducible, and the natural shape for
 the TPU-mesh variant (launch/gossip_sim.py, core/decentralized.py).
+
+Dynamic-network scenarios (core/scenario.py) ride the same scan: a
+time-varying :class:`~repro.core.scenario.GraphSequence` just changes the
+pre-drawn schedule *data* (same shapes — zero recompiles, asserted in
+tests/test_scenario.py), message drops arrive as the comm layer's existing
+no-op encodings (self-partner rows / the ``(i, i)`` edge sentinel), and node
+churn threads through the optional ``alive [T, n]`` input: a down node
+neither mixes nor updates, and its step counter stays frozen. ``degrees``
+may be per-step ``[T, n]`` so the Remark-1 correction tracks a rewiring
+topology.
 """
 
 from __future__ import annotations
@@ -126,14 +136,21 @@ def _resolve_schedule_kind(schedule: jax.Array, n: int, kind: str) -> str:
 def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
                mask: jax.Array, schedule: jax.Array, degrees: jax.Array,
                n_steps: int, record_every: int = 10,
-               schedule_kind: str = "auto") -> DeledaTrace:
+               schedule_kind: str = "auto",
+               alive: jax.Array | None = None) -> DeledaTrace:
     """Run DELEDA for `n_steps` gossip iterations.
 
     words: [n, D, L] int32 private documents per node; mask: [n, D, L] bool;
     schedule: [n_steps, 2] int32 pre-drawn edge activations
     (gossip.draw_edge_schedule) OR [n_steps, n] int32 matching partner
     vectors (gossip.draw_matching_schedule / comm.GossipSchedule.partners);
-    degrees: [n] int32 node degrees (for the async degree correction).
+    degrees: [n] int32 node degrees, or [n_steps, n] per-step degrees for a
+    time-varying topology (both feed the async degree correction);
+    alive: optional [n_steps, n] bool churn mask (core/scenario.py) — a
+    node that is down at step t neither mixes nor updates at t and its step
+    counter stays frozen. Dropped gossip events need no extra input: they
+    are encoded in the schedule itself (self-partner rows / ``(i, i)`` edge
+    sentinels) and skip the mix and — async — the wake-up.
     """
     if n_steps % record_every != 0:
         raise ValueError("n_steps must be divisible by record_every")
@@ -154,12 +171,28 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     # with probability deg(i)/|E|. Under random maximal matching rounds wake
     # rates are near-uniform in the degree, so the correction would skew the
     # objective instead of fixing it — it only applies to edge schedules.
-    mean_deg = degrees.astype(jnp.float32).mean()
+    deg_f = degrees.astype(jnp.float32)
+    if deg_f.ndim == 1:
+        deg_t = jnp.broadcast_to(deg_f, (n_steps, n))   # static topology
+    elif deg_f.shape == (n_steps, n):
+        deg_t = deg_f                                   # per-step degrees
+    else:
+        raise ValueError(f"degrees must be [n={n}] or [{n_steps}, {n}], "
+                         f"got shape {deg_f.shape}")
     if (config.degree_correction and config.mode == "async"
             and kind == "edge"):
-        corr = mean_deg / jnp.maximum(degrees.astype(jnp.float32), 1.0)  # [n]
+        corr_t = (deg_t.mean(axis=1, keepdims=True)
+                  / jnp.maximum(deg_t, 1.0))            # [T, n]
     else:
-        corr = jnp.ones((n,), jnp.float32)
+        corr_t = jnp.ones((n_steps, n), jnp.float32)
+
+    if alive is None:
+        alive_t = jnp.ones((n_steps, n), bool)
+    else:
+        if alive.shape != (n_steps, n):
+            raise ValueError(f"alive must be [{n_steps}, {n}], "
+                             f"got shape {alive.shape}")
+        alive_t = alive.astype(bool)
 
     def sample_batch(k, node_words, node_mask):
         idx = jax.random.randint(k, (config.batch_size,), 0, d)
@@ -190,44 +223,58 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
 
     def iteration(carry, inp):
         stats, steps = carry
-        event, k = inp
+        event, k, al, corr = inp                              # al/corr [n]
         k_sel, k_gibbs = jax.random.split(k)
 
         if kind == "edge":
             i, j = event[0], event[1]
-            # -- gossip averaging step (Algorithm 1, line 4)
-            stats = comm.mix_edge(stats, i, j)
+            # an event is live unless it is the (i, i) drop sentinel or an
+            # endpoint is down this step (churn)
+            ev_live = (i != j) & al[i] & al[j]
+            # -- gossip averaging step (Algorithm 1, line 4); a dead event
+            # mixes (i, i), which every backend applies as the identity
+            j_eff = jnp.where(ev_live, j, i)
+            stats = comm.mix_edge(stats, i, j_eff)
             if config.mode == "sync":
-                # -- every node updates locally (Algorithm 1, lines 5-7)
-                stats, steps = update_rows(stats, steps, node_ids, k_sel,
-                                           k_gibbs, words, mask, corr)
+                # -- every live node updates locally (Algorithm 1, l. 5-7)
+                new_stats, new_steps = update_rows(
+                    stats, steps, node_ids, k_sel, k_gibbs, words, mask,
+                    corr)
+                stats = jnp.where(al[:, None, None], new_stats, stats)
+                steps = jnp.where(al, new_steps, steps)
             else:
                 # -- only the two awake nodes update (async variant)
                 active = jnp.stack([i, j])                    # [2]
                 up_stats, up_steps = update_rows(
                     stats[active], steps[active], active, k_sel, k_gibbs,
                     words[active], mask[active], corr[active])
+                upd = jnp.stack([ev_live, ev_live])
+                up_stats = jnp.where(upd[:, None, None], up_stats,
+                                     stats[active])
+                up_steps = jnp.where(upd, up_steps, steps[active])
                 stats = stats.at[active].set(up_stats)
                 steps = steps.at[active].set(up_steps)
         else:
             partners = event                                  # [n]
+            # churn guard: a pair with a down endpoint mixes as self-self
+            # (symmetric in (i, p[i]), so the row stays an involution)
+            partners = jnp.where(al & al[partners], partners, node_ids)
             stats = comm.mix_matching(stats, partners)
             new_stats, new_steps = update_rows(stats, steps, node_ids,
                                                k_sel, k_gibbs, words,
                                                mask, corr)
             if config.mode == "sync":
-                stats, steps = new_stats, new_steps
+                upd = al                                      # [n]
             else:
-                # matched nodes are the awake ones this round
-                awake = partners != node_ids                  # [n]
-                stats = jnp.where(awake[:, None, None], new_stats, stats)
-                steps = jnp.where(awake, new_steps, steps)
+                # matched live nodes are the awake ones this round
+                upd = (partners != node_ids) & al
+            stats = jnp.where(upd[:, None, None], new_stats, stats)
+            steps = jnp.where(upd, new_steps, steps)
 
         return (stats, steps), None
 
     def record_block(carry, inp):
-        event_block, key_block = inp
-        carry, _ = jax.lax.scan(iteration, carry, (event_block, key_block))
+        carry, _ = jax.lax.scan(iteration, carry, inp)
         stats, _steps = carry
         return carry, (stats, gossip.consensus_distance(stats))
 
@@ -235,8 +282,11 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     keys = jax.random.split(k_run, n_steps).reshape(n_rec, record_every)
     event_blocks = schedule.reshape(n_rec, record_every,
                                     schedule.shape[-1])
+    alive_blocks = alive_t.reshape(n_rec, record_every, n)
+    corr_blocks = corr_t.reshape(n_rec, record_every, n)
     (stats, steps), (history, consensus) = jax.lax.scan(
-        record_block, (stats0, steps0), (event_blocks, keys))
+        record_block, (stats0, steps0),
+        (event_blocks, keys, alive_blocks, corr_blocks))
     return DeledaTrace(stats=stats, steps=steps, history=history,
                        consensus=consensus)
 

@@ -32,7 +32,7 @@ class Graph:
             raise ValueError(f"edges must be [E,2], got {e.shape}")
         if (e[:, 0] == e[:, 1]).any():
             raise ValueError("self-loops not allowed")
-        if e.min() < 0 or e.max() >= self.n_nodes:
+        if len(e) and (e.min() < 0 or e.max() >= self.n_nodes):
             raise ValueError("edge endpoint out of range")
         canon = np.sort(e, axis=1)
         if len({(int(a), int(b)) for a, b in canon}) != len(canon):
@@ -57,9 +57,31 @@ class Graph:
         return a
 
     def is_connected(self) -> bool:
-        a = self.adjacency() + np.eye(self.n_nodes)
-        reach = np.linalg.matrix_power(a, self.n_nodes) > 0
-        return bool(reach[0].all())
+        """BFS frontier propagation over the edge list.
+
+        O(diameter) vectorized passes of O(E) work — replaces the old
+        ``matrix_power(A + I, n)`` reachability, which was O(n^3 log n)
+        *and* overflowed float64 around n≈500 (2^n-ish path counts), so
+        large graphs could silently misreport connectivity.
+        """
+        n = self.n_nodes
+        if n <= 1:
+            return True
+        if self.n_edges == 0:
+            return False
+        ei, ej = self.edges[:, 0], self.edges[:, 1]
+        reached = np.zeros(n, bool)
+        reached[0] = True
+        while True:
+            hit = reached[ei] | reached[ej]      # edges touching the set
+            new = reached.copy()
+            new[ei[hit]] = True
+            new[ej[hit]] = True
+            if new.all():
+                return True
+            if (new == reached).all():
+                return False
+            reached = new
 
     def expected_w(self) -> np.ndarray:
         """E[W] under uniform random edge activation."""

@@ -104,15 +104,21 @@ def sample_topic_matrix(config: LDAConfig, key: jax.Array,
 
 
 def sample_document(config: LDAConfig, key: jax.Array, beta: jax.Array,
-                    length: jax.Array) -> tuple[jax.Array, jax.Array]:
+                    length: jax.Array,
+                    alpha_vec: Optional[jax.Array] = None
+                    ) -> tuple[jax.Array, jax.Array]:
     """Generate one padded document via the LDA generative process.
 
     Returns (words [doc_len_max] int32, mask [doc_len_max] bool). `length`
     may be traced (e.g. Poisson-drawn); tokens past `length` are masked.
+    `alpha_vec` optionally replaces the symmetric Dirichlet prior on theta
+    with an asymmetric [K] one (the non-IID shard knob of
+    data/lda_synthetic.py: per-node topic-skewed concentrations).
     """
     k_theta, k_z, k_w = jax.random.split(key, 3)
-    theta = jax.random.dirichlet(
-        k_theta, jnp.full((config.n_topics,), config.alpha))
+    if alpha_vec is None:
+        alpha_vec = jnp.full((config.n_topics,), config.alpha)
+    theta = jax.random.dirichlet(k_theta, alpha_vec)
     z = jax.random.categorical(
         k_z, jnp.log(theta)[None, :], axis=-1,
         shape=(config.doc_len_max,))                      # [L]

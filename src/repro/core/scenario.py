@@ -1,0 +1,344 @@
+"""Scenario layer: time-varying graphs, node churn, and message drops.
+
+The paper's premise is a network of phones and sensors, but Algorithm 1 is
+analyzed (and was previously simulated here) on a *static* graph with
+perfectly reliable pairwise exchanges. Real decentralized networks rewire,
+partition, lose nodes, and drop messages — the regimes studied by Cyffers &
+Bellet ("Privacy Amplification by Decentralization") and Campbell & How
+("Approximate Decentralized Bayesian Inference"). This module makes those
+regimes first-class *without touching the hot path*: every dynamic effect is
+compiled host-side into plain schedule data, so ``run_deleda``'s single
+``lax.scan`` (and the mesh launcher's ppermute routing) consumes a scenario
+exactly like a static run — one jit compilation, no per-segment recompiles.
+
+Three composable ingredients:
+
+* :class:`GraphSequence` — a piecewise-constant time-varying topology:
+  ``graphs[s]`` is live for ``segment_steps[s]`` gossip rounds. Schedules
+  are drawn per segment from that segment's graph and concatenated, so a
+  round only ever activates edges alive in its segment
+  (tests/test_schedules.py property-checks this). The
+  :class:`~repro.core.comm.GossipSchedule` rows carry a ``segments`` axis
+  recording which segment each round came from.
+
+* **Unreliable communication** — per-event Bernoulli message drops and
+  per-node churn (a two-state Markov up/down process with a target
+  stationary down fraction and mean down-spell length). Both are encoded
+  as *no-op masks in the schedule itself*: a dropped or churned matching
+  pair is reset to self-partners (the Communicator layer's existing idle
+  encoding) and a dropped edge event becomes the sentinel ``(i, i)``.
+  Dense, Pallas and mesh comm backends therefore stay interchangeable —
+  MeshComm simply routes no ppermute for a masked pair. Churn additionally
+  produces an ``alive [T, n]`` mask consumed by ``run_deleda``: a down node
+  neither mixes nor updates, and its step counter stays frozen.
+
+* **Non-IID document shards** — ``topic_skew`` is forwarded to
+  :mod:`repro.data.lda_synthetic` (``CorpusSpec.topic_skew``): each node
+  draws Dirichlet(topic_skew)-skewed topic weights, so its corpus is
+  topically biased — the regime where gossip actually matters.
+
+Typical use::
+
+    seq = GraphSequence.rewiring(lambda s: watts_strogatz_graph(50, 4, 0.3,
+                                                                seed=s),
+                                 n_segments=5, steps_per_segment=60)
+    sc = Scenario(topology=seq, drop_prob=0.1, churn=0.2)
+    compiled = sc.compile(np.random.default_rng(0))
+    sched, degs, alive = compiled.run_inputs()
+    trace = run_deleda(cfg, key, words, mask, sched, degs, seq.n_steps,
+                       alive=alive)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import EDGE, MATCHING, GossipSchedule
+from repro.core.graph import Graph, watts_strogatz_graph
+
+
+# ----------------------------------------------------------------------------
+# Time-varying topologies
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GraphSequence:
+    """A piecewise-constant time-varying communication graph.
+
+    ``graphs[s]`` is the live topology for ``segment_steps[s]`` consecutive
+    gossip rounds; total horizon ``n_steps = sum(segment_steps)``.
+    """
+
+    graphs: tuple
+    segment_steps: tuple
+    name: str = "sequence"
+
+    def __post_init__(self):
+        graphs = tuple(self.graphs)
+        steps = tuple(int(t) for t in self.segment_steps)
+        if not graphs or len(graphs) != len(steps):
+            raise ValueError(
+                f"need equally many graphs and segment_steps, got "
+                f"{len(graphs)} graphs / {len(steps)} segments")
+        if any(t <= 0 for t in steps):
+            raise ValueError(f"segment_steps must be positive, got {steps}")
+        n = graphs[0].n_nodes
+        if any(g.n_nodes != n for g in graphs):
+            raise ValueError("all graphs must share n_nodes")
+        object.__setattr__(self, "graphs", graphs)
+        object.__setattr__(self, "segment_steps", steps)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.graphs[0].n_nodes
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.graphs)
+
+    @property
+    def n_steps(self) -> int:
+        return sum(self.segment_steps)
+
+    def segment_ids(self) -> np.ndarray:
+        """[T] int32: which segment each round belongs to."""
+        return np.repeat(np.arange(self.n_segments, dtype=np.int32),
+                         self.segment_steps)
+
+    def degrees(self) -> np.ndarray:
+        """[T, n] int32 per-round node degrees (piecewise constant)."""
+        per_seg = np.stack([g.degrees.astype(np.int32)
+                            for g in self.graphs])          # [S, n]
+        return np.repeat(per_seg, self.segment_steps, axis=0)
+
+    def graph_at(self, t: int) -> Graph:
+        return self.graphs[int(self.segment_ids()[t])]
+
+    # -- constructors --------------------------------------------------------
+
+    @staticmethod
+    def static(graph: Graph, n_steps: int) -> "GraphSequence":
+        """The degenerate single-segment sequence (a static graph)."""
+        return GraphSequence((graph,), (n_steps,), name=f"static:{graph.name}")
+
+    @staticmethod
+    def rewiring(factory: Callable[[int], Graph], n_segments: int,
+                 steps_per_segment: int, seed: int = 0) -> "GraphSequence":
+        """Independent re-draws of a random topology, one per segment.
+
+        ``factory(seed_s)`` builds segment s's graph; e.g.
+        ``lambda s: watts_strogatz_graph(50, 4, 0.3, seed=s)``.
+        """
+        graphs = tuple(factory(seed + s) for s in range(n_segments))
+        return GraphSequence(graphs, (steps_per_segment,) * n_segments,
+                             name=f"rewiring:{graphs[0].name}x{n_segments}")
+
+    # -- schedule drawing ----------------------------------------------------
+
+    def draw_schedule(self, kind: str, rng: np.random.Generator
+                      ) -> GossipSchedule:
+        """Pre-draw one schedule for the whole horizon, per-segment.
+
+        Each segment's rounds are drawn from *that segment's* graph, then
+        concatenated into one [T, ...] array with a ``segments`` axis — the
+        shape ``run_deleda`` scans without any per-segment recompile.
+        """
+        parts = []
+        for g, t in zip(self.graphs, self.segment_steps):
+            if kind == EDGE:
+                parts.append(GossipSchedule.draw_edges(g, t, rng).data)
+            elif kind == MATCHING:
+                parts.append(GossipSchedule.draw_matchings(g, t, rng).data)
+            else:
+                raise ValueError(f"kind must be edge|matching, got {kind!r}")
+        return GossipSchedule(kind, np.concatenate(parts, axis=0),
+                              self.n_nodes, segments=self.segment_ids())
+
+
+# ----------------------------------------------------------------------------
+# Scenario = topology sequence + unreliability knobs + data skew
+# ----------------------------------------------------------------------------
+
+class CompiledScenario(NamedTuple):
+    """Host-side artifacts of Scenario.compile — plain schedule data."""
+
+    schedule: GossipSchedule   # drops/churn already applied (no-op encoded)
+    alive: np.ndarray          # [T, n] bool; False = node down that round
+    degrees: np.ndarray        # [T, n] int32 per-round degrees
+    n_events: int              # gossip events drawn before masking
+    n_dropped: int             # events removed by Bernoulli message drops
+    n_churned: int             # events removed because an endpoint was down
+
+    def run_inputs(self):
+        """(schedule, degrees, alive) device arrays for ``run_deleda``."""
+        return (jnp.asarray(self.schedule.data),
+                jnp.asarray(self.degrees),
+                jnp.asarray(self.alive))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named dynamic-network regime for DELEDA runs.
+
+    drop_prob:        per-event Bernoulli probability a gossip exchange is
+                      lost (the pair neither mixes nor — async — wakes).
+    churn:            stationary fraction of nodes that are down at any
+                      round (two-state Markov process per node).
+    churn_mean_down:  mean length of a down spell, in rounds.
+    topic_skew:       Dirichlet concentration of the per-node topic-weight
+                      draw in data/lda_synthetic (None = IID shards);
+                      carried here so one object describes the whole regime.
+    """
+
+    topology: GraphSequence
+    kind: str = MATCHING           # schedule granularity: "matching" | "edge"
+    drop_prob: float = 0.0
+    churn: float = 0.0
+    churn_mean_down: float = 10.0
+    topic_skew: float | None = None
+    name: str = "scenario"
+
+    def __post_init__(self):
+        if self.kind not in (EDGE, MATCHING):
+            raise ValueError(f"kind must be edge|matching, got {self.kind!r}")
+        if not 0.0 <= self.drop_prob < 1.0:
+            raise ValueError(f"drop_prob must be in [0, 1), {self.drop_prob}")
+        if not 0.0 <= self.churn < 1.0:
+            raise ValueError(f"churn must be in [0, 1), got {self.churn}")
+        if self.churn_mean_down < 1.0:
+            raise ValueError("churn_mean_down must be >= 1 round")
+        if self.churn > 0:
+            q = self.churn / ((1.0 - self.churn) * self.churn_mean_down)
+            if q > 1.0:
+                raise ValueError(
+                    f"churn={self.churn} with mean down spell "
+                    f"{self.churn_mean_down} needs P(up->down)={q:.2f} > 1; "
+                    f"lower churn or raise churn_mean_down")
+
+    @property
+    def n_steps(self) -> int:
+        return self.topology.n_steps
+
+    # -- churn process -------------------------------------------------------
+
+    def draw_alive(self, rng: np.random.Generator) -> np.ndarray:
+        """[T, n] bool up/down trajectories of the per-node Markov chain.
+
+        P(down->up) = 1/churn_mean_down; P(up->down) is set so the
+        stationary down fraction equals ``churn``; the chain starts in its
+        stationary distribution.
+        """
+        t, n = self.n_steps, self.topology.n_nodes
+        if self.churn <= 0.0:
+            return np.ones((t, n), bool)
+        r = 1.0 / self.churn_mean_down                 # down -> up
+        q = self.churn * r / (1.0 - self.churn)        # up -> down
+        alive = np.empty((t, n), bool)
+        state = rng.random(n) >= self.churn            # stationary init
+        for step in range(t):
+            alive[step] = state
+            u = rng.random(n)
+            state = np.where(state, u >= q, u < r)
+        return alive
+
+    # -- compilation ---------------------------------------------------------
+
+    def compile(self, rng: np.random.Generator | int = 0) -> CompiledScenario:
+        """Pre-draw + mask the whole trajectory into plain schedule data.
+
+        Order of operations per round: (1) draw the gossip event(s) from the
+        segment's graph, (2) cancel events touching a down endpoint (churn),
+        (3) drop each surviving event with probability ``drop_prob``.
+        Cancelled events become the Communicator layer's existing no-op
+        encoding (self-partner / ``(i, i)`` edge sentinel), so every comm
+        backend applies them unchanged.
+        """
+        if not isinstance(rng, np.random.Generator):
+            rng = np.random.default_rng(rng)
+        sched = self.topology.draw_schedule(self.kind, rng)
+        alive = self.draw_alive(rng)
+        data = sched.data.copy()
+        t = len(data)
+
+        if self.kind == MATCHING:
+            ids = np.arange(self.topology.n_nodes, dtype=np.int32)
+            matched = data != ids                               # [T, n]
+            n_events = int(matched.sum()) // 2
+            # churn: cancel any pair with a down endpoint (both directions)
+            rows = np.arange(t)[:, None]
+            pair_down = ~alive | ~alive[rows, data]             # [T, n]
+            churned = matched & pair_down
+            data = np.where(churned, ids, data)
+            n_churned = int(churned.sum()) // 2
+            # drops: one coin per PAIR — draw on the (i < p[i]) side and
+            # mirror, so both endpoints see the same coin
+            still = data != ids
+            coin = rng.random(data.shape) < self.drop_prob
+            low = still & (ids < data)                          # pair owners
+            drop_low = low & coin
+            dropped = drop_low | drop_low[rows, data]
+            data = np.where(dropped, ids, data)
+            n_dropped = int(dropped.sum()) // 2
+        else:
+            i, j = data[:, 0], data[:, 1]
+            n_events = t
+            churned = ~alive[np.arange(t), i] | ~alive[np.arange(t), j]
+            n_churned = int(churned.sum())
+            coin = rng.random(t) < self.drop_prob
+            dropped = ~churned & coin
+            n_dropped = int(dropped.sum())
+            dead = churned | dropped
+            # the (i, i) sentinel: mix is identity, run_deleda wakes no one
+            data[dead, 1] = data[dead, 0]
+
+        sched = GossipSchedule(self.kind, data, self.topology.n_nodes,
+                               segments=sched.segments)
+        return CompiledScenario(schedule=sched, alive=alive,
+                                degrees=self.topology.degrees(),
+                                n_events=n_events, n_dropped=n_dropped,
+                                n_churned=n_churned)
+
+
+# ----------------------------------------------------------------------------
+# The named regimes of benchmarks/scenario_bench.py
+# ----------------------------------------------------------------------------
+
+SCENARIO_NAMES = ("static", "rewiring", "drop10", "churn20", "noniid")
+
+
+def paper_scenario(name: str, n: int = 50, n_steps: int = 300,
+                   seed: int = 0, ws_k: int = 4, ws_p: float = 0.3,
+                   n_segments: int = 5) -> Scenario:
+    """The named paper-scale regimes on Watts-Strogatz graphs.
+
+    static   — the paper's fixed WS graph (the baseline);
+    rewiring — the WS graph re-drawn every n_steps/n_segments rounds;
+    drop10   — static topology, 10% of gossip exchanges lost;
+    churn20  — static topology, 20% of nodes down at any time;
+    noniid   — static topology, Dirichlet(0.5)-skewed topic shards.
+    """
+    if name not in SCENARIO_NAMES:
+        raise ValueError(f"unknown scenario {name!r}; want one of "
+                         f"{SCENARIO_NAMES}")
+    if name == "rewiring":
+        if n_steps % n_segments:
+            raise ValueError(f"n_steps={n_steps} must divide into "
+                             f"{n_segments} segments")
+        seq = GraphSequence.rewiring(
+            lambda s: watts_strogatz_graph(n, ws_k, ws_p, seed=s),
+            n_segments, n_steps // n_segments, seed=seed)
+    else:
+        seq = GraphSequence.static(
+            watts_strogatz_graph(n, ws_k, ws_p, seed=seed), n_steps)
+    knobs = {
+        "static": {},
+        "rewiring": {},
+        "drop10": {"drop_prob": 0.1},
+        "churn20": {"churn": 0.2},
+        "noniid": {"topic_skew": 0.5},
+    }[name]
+    return Scenario(topology=seq, name=name, **knobs)

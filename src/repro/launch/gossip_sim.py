@@ -45,22 +45,57 @@ from repro.launch.mesh import make_host_mesh
 def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     batch_size: int, seed: int = 0, mesh=None,
                     schedule: GossipSchedule | None = None,
-                    estep_backend: str = "dense"):
+                    estep_backend: str = "dense",
+                    scenario=None, alive: np.ndarray | None = None):
     """words/mask [n, D, L] node-sharded over the mesh "data" axis.
 
     Returns (stats [n, K, V], consensus trace, wall seconds). The gossip
     path is pure MeshComm ppermute routing; the local-update step contains
     no collectives at all — each device runs ONE fused E-step over all of
     its local nodes' minibatches (`repro.core.estep.estep_batch`).
+
+    Dynamic-network regimes: pass a `repro.core.scenario.Scenario` (its
+    compiled schedule + churn mask replace `schedule`/`alive`; `graph` may
+    then be None) or an explicit `alive [T, n]` mask. Dropped pairs are
+    self-partner rows, so `_route_matching` emits NO ppermute pass for them
+    — a masked exchange costs zero wire bytes, not a wasted hop. Down
+    (churned) nodes skip their local update and their step counter stays
+    frozen, matching `run_deleda`'s semantics.
     """
     mesh = mesh or make_host_mesh()
     n = words.shape[0]
     comm = MeshComm(mesh=mesh, axis_name="data")
     assert n % comm.n_devices == 0, (n, comm.n_devices)
+    if scenario is not None:
+        if scenario.topology.n_nodes != n:
+            raise ValueError(
+                f"scenario topology has {scenario.topology.n_nodes} nodes "
+                f"but the corpus shards {n}")
+        compiled = scenario.compile(np.random.default_rng(seed))
+        schedule, alive = compiled.schedule, compiled.alive
+        if n_steps > schedule.n_rounds:
+            raise ValueError(f"scenario horizon {schedule.n_rounds} < "
+                             f"n_steps {n_steps}")
     if schedule is None:
         rng = np.random.default_rng(seed)
         schedule = GossipSchedule.draw_matchings(graph, n_steps, rng)
-    partners = schedule.partners()                       # [T, n]
+    partners = schedule.partners()[:n_steps]             # [T, n]
+    if len(partners) < n_steps:
+        raise ValueError(f"schedule has {len(partners)} rounds < "
+                         f"n_steps {n_steps}")
+    if alive is None:
+        alive = np.ones((n_steps, n), bool)
+    else:
+        alive = np.asarray(alive, bool)[:n_steps]
+        if alive.shape != (n_steps, n):
+            raise ValueError(f"alive must cover [{n_steps}, {n}], "
+                             f"got shape {alive.shape}")
+    ids = np.arange(n, dtype=np.int32)
+    # churn guard (host-side, symmetric): a pair with a down endpoint
+    # becomes self-partners -> MeshComm routes no ppermute for it
+    rows = np.arange(n_steps)[:, None]
+    pair_up = alive & alive[rows, partners]
+    partners = np.where(pair_up, partners, ids)
     rho_fn = make_rho_schedule("power")
     estep = estep_mod.get_estep(estep_backend)
 
@@ -73,10 +108,11 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         jax.random.split(jax.random.key(seed), n))
     stats0 = jax.device_put(stats0, sharding)
 
-    def update_fn(stats, steps, key, w, m):
+    def update_fn(stats, steps, key, w, m, al):
         # stats [n_local, K, V]; pure local G-OEM — NO collectives here,
         # gossip already happened via MeshComm outside this jit. All of
-        # the device's nodes run as ONE fused [n_local*B, L] E-step call.
+        # the device's nodes run as ONE fused [n_local*B, L] E-step call;
+        # al [n_local] bool masks out down (churned) nodes.
         n_local = stats.shape[0]
         dev = jax.lax.axis_index("data")
         key = jax.random.fold_in(key, dev)   # per-device stream (varying)
@@ -93,14 +129,17 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         stats_hat = estep_mod.estep_batch(estep, lda, k_gibbs, bw, bm,
                                           beta)
         rho = rho_fn(steps + 1).astype(stats.dtype)[:, None, None]
-        return (1 - rho) * stats + rho * stats_hat, steps + 1
+        new_stats = (1 - rho) * stats + rho * stats_hat
+        return (jnp.where(al[:, None, None], new_stats, stats),
+                jnp.where(al, steps + 1, steps))
 
     shmap = compat.shard_map(
         update_fn, mesh=mesh,
-        in_specs=(node, node, P(), node, node),
+        in_specs=(node, node, P(), node, node, node),
         out_specs=(node, node))
     jitted = jax.jit(shmap, donate_argnums=(0,))
 
+    alive_dev = jnp.asarray(alive)
     stats = stats0
     steps = jnp.zeros((n,), jnp.int32)
     consensus = []
@@ -108,10 +147,11 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
     for t in range(n_steps):
         # ---- gossip: one matching round, MeshComm ppermute routing
         stats = comm.mix_matching(stats, partners[t])
-        # ---- local G-OEM updates (every node, synchronous variant)
+        # ---- local G-OEM updates (every live node, synchronous variant)
         stats, steps = jitted(stats, steps,
                               jax.random.key(seed * 100003 + t),
-                              words, mask)
+                              words, mask,
+                              jax.device_put(alive_dev[t], sharding))
         if t % 10 == 0 or t == n_steps - 1:
             consensus.append(float(gossip.consensus_distance(stats)))
     return stats, consensus, time.time() - t0
@@ -128,6 +168,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--estep-backend", default="dense",
                     choices=list(estep_mod.ESTEP_BACKENDS))
+    ap.add_argument("--drop", type=float, default=0.0,
+                    help="per-event gossip message drop probability")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="stationary fraction of nodes down at any round")
     args = ap.parse_args(argv)
 
     lda = LDAConfig(n_topics=PAPER.lda.n_topics,
@@ -142,9 +186,18 @@ def main(argv=None):
              else watts_strogatz_graph(args.nodes, 4, 0.3, args.seed))
     print(f"n={args.nodes} graph={graph.name} lambda2={graph.lambda2():.4f}")
 
+    scenario = None
+    if args.drop > 0 or args.churn > 0:
+        from repro.core.scenario import GraphSequence, Scenario
+        scenario = Scenario(
+            topology=GraphSequence.static(graph, args.steps),
+            drop_prob=args.drop, churn=args.churn,
+            name=f"drop{args.drop}-churn{args.churn}")
+        print(f"scenario: drop={args.drop} churn={args.churn}")
+
     stats, consensus, sec = run_mesh_deleda(
         lda, corpus.words, corpus.mask, graph, args.steps, args.batch,
-        args.seed, estep_backend=args.estep_backend)
+        args.seed, estep_backend=args.estep_backend, scenario=scenario)
     d = float(beta_distance(eta_star(stats[0]), corpus.beta_star))
     print(f"{args.steps} steps in {sec:.1f}s | consensus {consensus} "
           f"| D(beta, beta*) node0 = {d:.4f}")

@@ -1,15 +1,12 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real device
 count (1 CPU); multi-device mesh behaviour is tested via subprocesses in
 test_mesh_collectives.py, and the 512-device production meshes only ever
-exist inside repro.launch.dryrun."""
+exist inside repro.launch.dryrun.
+
+Markers (slow vs tier-1) are declared in pytest.ini."""
 
 import jax
 import pytest
-
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers", "slow: multi-device subprocess tests (several minutes)")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,32 @@
+"""Tiny statistics helpers for the test suite (no scipy in the image).
+
+All tests that gate on a statistical quantity use FIXED jax PRNG seeds, so
+they are deterministic — the quantiles below only set how surprising the
+pinned draw would have to be before we call it a bug.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def chi2_critical(df: int, z: float = 3.0902) -> float:
+    """Upper chi-square quantile via Wilson-Hilferty.
+
+    z is the standard-normal quantile of the target level (default
+    z=3.0902 -> 99.9%). Accurate to ~1% for df >= 3, which is plenty for a
+    pass/fail gate on a fixed seed.
+    """
+    k = float(df)
+    return k * (1.0 - 2.0 / (9.0 * k) + z * np.sqrt(2.0 / (9.0 * k))) ** 3
+
+
+def chi2_statistic(counts: np.ndarray, probs: np.ndarray) -> float:
+    """Pearson chi-square of observed counts against target cell probs."""
+    counts = np.asarray(counts, np.float64)
+    probs = np.asarray(probs, np.float64)
+    probs = probs / probs.sum()
+    expected = counts.sum() * probs
+    if (expected < 5).any():
+        raise ValueError("chi-square needs >= 5 expected counts per cell")
+    return float(((counts - expected) ** 2 / expected).sum())

@@ -1,0 +1,109 @@
+"""Golden-trace determinism: pinned run_deleda fingerprints across comm x
+estep backend combinations, so silent numeric drift in future refactors
+fails loudly instead of shipping.
+
+The fingerprint is a short summary (total mass, sum of squares, probe
+values, step counters) of the final statistics of one fixed small run.
+Regenerate after an INTENTIONAL numeric change with:
+
+    GOLDEN_REGEN=1 PYTHONPATH=src python -m pytest tests/test_golden.py
+
+and commit the refreshed tests/golden_deleda.json along with an
+explanation of why the trajectory legitimately moved.
+"""
+
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, deleda, estep
+from repro.core.graph import watts_strogatz_graph
+from repro.core.lda import LDAConfig
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_deleda.json"
+
+CFG = LDAConfig(n_topics=3, vocab_size=20, alpha=0.5, doc_len_max=8,
+                n_gibbs=4, n_gibbs_burnin=2)
+N, T = 8, 20
+
+COMBOS = [(c, e) for c in comm.SIM_BACKENDS for e in estep.ESTEP_BACKENDS]
+KINDS = ("edge", "matching")
+
+
+def _fingerprint(trace: deleda.DeledaTrace) -> dict:
+    stats = np.asarray(trace.stats, np.float64)
+    probe = stats[::3, 1, ::7].reshape(-1)
+    return {
+        "mass": float(stats.sum()),
+        "sumsq": float((stats ** 2).sum()),
+        "probe": [float(v) for v in probe],
+        "steps": [int(s) for s in np.asarray(trace.steps)],
+        "consensus_final": float(np.asarray(trace.consensus)[-1]),
+    }
+
+
+def _run(comm_backend: str, estep_backend: str, kind: str):
+    corpus = make_corpus(CFG, jax.random.key(0),
+                         CorpusSpec(n_nodes=N, docs_per_node=4, n_test=4))
+    g = watts_strogatz_graph(N, 4, 0.3, seed=0)
+    sched, degs = deleda.make_run_inputs(g, T, seed=0, kind=kind)
+    cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2,
+                              comm_backend=comm_backend,
+                              estep_backend=estep_backend)
+    return deleda.run_deleda(cfg, jax.random.key(1), corpus.words,
+                             corpus.mask, sched, degs, T, record_every=10)
+
+
+def _golden() -> dict:
+    if not GOLDEN_PATH.exists():
+        pytest.skip(f"{GOLDEN_PATH.name} missing; run with GOLDEN_REGEN=1")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def regen_if_requested():
+    if os.environ.get("GOLDEN_REGEN"):
+        payload = {}
+        for kind in KINDS:
+            for cb, eb in COMBOS:
+                payload[f"{kind}:{cb}:{eb}"] = _fingerprint(_run(cb, eb,
+                                                                 kind))
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+    yield
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("cb,eb", COMBOS)
+def test_trace_matches_golden(kind, cb, eb):
+    golden = _golden()[f"{kind}:{cb}:{eb}"]
+    got = _fingerprint(_run(cb, eb, kind))
+    assert got["steps"] == golden["steps"]
+    # float32 trajectories reduced in float64: drift beyond ~1e-4 relative
+    # means the numerics changed, not just the summation order
+    np.testing.assert_allclose(got["mass"], golden["mass"], rtol=1e-4)
+    np.testing.assert_allclose(got["sumsq"], golden["sumsq"], rtol=1e-4)
+    np.testing.assert_allclose(got["probe"], golden["probe"], rtol=3e-3,
+                               atol=1e-5)
+    np.testing.assert_allclose(got["consensus_final"],
+                               golden["consensus_final"], rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_backend_combos_agree_with_each_other():
+    """Independent of the pinned goldens: all four backend combos of the
+    same run agree to float tolerance (the registry contract)."""
+    ref = None
+    for cb, eb in COMBOS:
+        stats = np.asarray(_run(cb, eb, "matching").stats)
+        if ref is None:
+            ref = stats
+        else:
+            np.testing.assert_allclose(stats, ref, atol=2e-5)

@@ -52,6 +52,26 @@ def test_graph_validation():
         G.Graph(3, np.array([[0, 1], [1, 0]]))  # duplicate
 
 
+def test_is_connected_large_and_disconnected():
+    """BFS reachability at n=500 (the old matrix_power overflowed float64
+    here) plus explicit negative cases."""
+    g = G.watts_strogatz_graph(500, 4, 0.3, seed=0)
+    assert g.is_connected()
+    # two disjoint cliques
+    clique = [(i, j) for i in range(5) for j in range(i + 1, 5)]
+    far = [(i + 5, j + 5) for i, j in clique]
+    assert not G.Graph(10, np.array(clique + far, np.int32)).is_connected()
+    # isolated vertex
+    assert not G.Graph(4, np.array([[0, 1], [1, 2]], np.int32)) \
+        .is_connected()
+    # degenerate sizes
+    assert G.Graph(1, np.zeros((0, 2), np.int32)).is_connected()
+    assert not G.Graph(3, np.zeros((0, 2), np.int32)).is_connected()
+    # path graph: worst-case diameter for the frontier loop
+    path = np.array([(i, i + 1) for i in range(499)], np.int32)
+    assert G.Graph(500, path).is_connected()
+
+
 def test_hypercube_and_grid():
     h = G.hypercube_graph(3)
     assert h.n_nodes == 8 and h.n_edges == 12

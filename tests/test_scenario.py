@@ -1,0 +1,321 @@
+"""Scenario layer: time-varying graphs, churn, drops — and the single-jit
+contract: every dynamic regime is schedule DATA consumed by the one
+compiled ``run_deleda`` trace (no per-segment recompiles)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, deleda
+from repro.core import scenario as scn
+from repro.core.graph import complete_graph, ring_graph, watts_strogatz_graph
+from repro.core.lda import LDAConfig, init_stats
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+CFG = LDAConfig(n_topics=3, vocab_size=24, alpha=0.5, doc_len_max=10,
+                n_gibbs=4, n_gibbs_burnin=2)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CFG, jax.random.key(0),
+                       CorpusSpec(n_nodes=10, docs_per_node=4, n_test=6))
+
+
+def _ws(seed):
+    return watts_strogatz_graph(10, 4, 0.3, seed=seed)
+
+
+def _seq(n_segments=3, steps=10):
+    return scn.GraphSequence.rewiring(_ws, n_segments, steps)
+
+
+# ---------------------------------------------------------------------------
+# GraphSequence
+# ---------------------------------------------------------------------------
+
+def test_graph_sequence_validation():
+    g = _ws(0)
+    with pytest.raises(ValueError):
+        scn.GraphSequence((g,), (5, 5))            # length mismatch
+    with pytest.raises(ValueError):
+        scn.GraphSequence((g,), (0,))              # nonpositive steps
+    with pytest.raises(ValueError):
+        scn.GraphSequence((g, complete_graph(4)), (5, 5))  # n differs
+    with pytest.raises(ValueError):
+        scn.GraphSequence((), ())
+
+
+def test_graph_sequence_shapes_and_degrees():
+    seq = _seq(3, 10)
+    assert seq.n_steps == 30 and seq.n_segments == 3 and seq.n_nodes == 10
+    seg = seq.segment_ids()
+    assert seg.shape == (30,)
+    np.testing.assert_array_equal(np.unique(seg), [0, 1, 2])
+    degs = seq.degrees()
+    assert degs.shape == (30, 10)
+    for s in range(3):
+        np.testing.assert_array_equal(degs[seg == s][0],
+                                      seq.graphs[s].degrees)
+    assert seq.graph_at(0) is seq.graphs[0]
+    assert seq.graph_at(29) is seq.graphs[2]
+
+
+@pytest.mark.parametrize("kind", [comm.EDGE, comm.MATCHING])
+def test_draw_schedule_respects_segment_topology(kind):
+    """Every activated pair must be an edge of ITS segment's graph."""
+    seq = _seq(3, 8)
+    sched = seq.draw_schedule(kind, np.random.default_rng(0))
+    assert sched.n_rounds == 24 and sched.n_segments == 3
+    partners = sched.partners()
+    seg = sched.segments
+    for t in range(sched.n_rounds):
+        edges = {(int(a), int(b))
+                 for a, b in seq.graphs[seg[t]].edges}
+        edges |= {(b, a) for a, b in edges}
+        for i, p in enumerate(partners[t]):
+            if p != i:
+                assert (i, int(p)) in edges, (t, i, int(p))
+
+
+# ---------------------------------------------------------------------------
+# Scenario validation + churn process
+# ---------------------------------------------------------------------------
+
+def test_scenario_validation():
+    seq = _seq()
+    with pytest.raises(ValueError):
+        scn.Scenario(topology=seq, drop_prob=1.0)
+    with pytest.raises(ValueError):
+        scn.Scenario(topology=seq, churn=-0.1)
+    with pytest.raises(ValueError):
+        scn.Scenario(topology=seq, kind="smoke-signals")
+    with pytest.raises(ValueError):
+        # needs P(up->down) > 1: infeasible chain
+        scn.Scenario(topology=seq, churn=0.9, churn_mean_down=1.0)
+    with pytest.raises(ValueError):
+        scn.paper_scenario("carrier-pigeon")
+
+
+def test_draw_alive_stationary_fraction_and_spells():
+    seq = scn.GraphSequence.static(_ws(0), 4000)
+    sc = scn.Scenario(topology=seq, churn=0.25, churn_mean_down=8.0)
+    alive = sc.draw_alive(np.random.default_rng(0))
+    assert alive.shape == (4000, 10)
+    down_frac = 1.0 - alive.mean()
+    assert abs(down_frac - 0.25) < 0.04, down_frac
+    # mean down-spell length ~ churn_mean_down
+    spells = []
+    for node in range(10):
+        run = 0
+        for up in alive[:, node]:
+            if not up:
+                run += 1
+            elif run:
+                spells.append(run)
+                run = 0
+    assert abs(np.mean(spells) - 8.0) < 2.0, np.mean(spells)
+
+
+def test_zero_churn_is_all_alive():
+    sc = scn.Scenario(topology=_seq())
+    assert sc.draw_alive(np.random.default_rng(0)).all()
+
+
+# ---------------------------------------------------------------------------
+# Compilation invariants
+# ---------------------------------------------------------------------------
+
+def test_compile_matching_masks_are_consistent():
+    seq = _seq(3, 20)
+    sc = scn.Scenario(topology=seq, drop_prob=0.3, churn=0.3,
+                      churn_mean_down=5.0)
+    cs = sc.compile(np.random.default_rng(1))
+    data, alive = cs.schedule.data, cs.alive
+    ids = np.arange(10)
+    t_rows = np.arange(len(data))[:, None]
+    # rows stay involutions after masking
+    np.testing.assert_array_equal(data[t_rows, data],
+                                  np.broadcast_to(ids, data.shape))
+    # no surviving pair touches a down node
+    matched = data != ids
+    assert (alive[matched.nonzero()[0], data[matched]]).all()
+    assert (alive[matched.nonzero()[0], matched.nonzero()[1]]).all()
+    # the accounting adds up: drawn = surviving + dropped + churned
+    surviving = int(matched.sum()) // 2
+    assert cs.n_events == surviving + cs.n_dropped + cs.n_churned
+    assert cs.n_dropped > 0 and cs.n_churned > 0
+    assert cs.degrees.shape == (60, 10)
+
+
+def test_compile_edge_kind_uses_sentinel():
+    seq = scn.GraphSequence.static(_ws(0), 200)
+    sc = scn.Scenario(topology=seq, kind=comm.EDGE, drop_prob=0.2,
+                      churn=0.2)
+    cs = sc.compile(np.random.default_rng(2))
+    data = cs.schedule.data
+    assert data.shape == (200, 2)
+    dead = data[:, 0] == data[:, 1]
+    assert int(dead.sum()) == cs.n_dropped + cs.n_churned > 0
+    # live events never touch a down endpoint
+    live = ~dead
+    t_idx = np.nonzero(live)[0]
+    assert cs.alive[t_idx, data[live, 0]].all()
+    assert cs.alive[t_idx, data[live, 1]].all()
+
+
+def test_drop_rate_matches_probability():
+    """Bernoulli drops hit ~drop_prob of the surviving events."""
+    seq = scn.GraphSequence.static(_ws(0), 2000)
+    sc = scn.Scenario(topology=seq, drop_prob=0.1)
+    cs = sc.compile(np.random.default_rng(3))
+    rate = cs.n_dropped / cs.n_events
+    assert abs(rate - 0.1) < 0.02, rate
+
+
+# ---------------------------------------------------------------------------
+# run_deleda semantics under scenarios
+# ---------------------------------------------------------------------------
+
+def test_churned_node_is_frozen(corpus):
+    """A node that is down for the whole run neither mixes nor updates:
+    step counter 0 and statistics bit-equal to its init row."""
+    n, t = 10, 20
+    g = complete_graph(n)
+    sched, degs = deleda.make_run_inputs(g, t, seed=0, kind="matching")
+    alive = np.ones((t, n), bool)
+    alive[:, 3] = False
+    cfg = deleda.DeledaConfig(lda=CFG, mode="sync", batch_size=2)
+    key = jax.random.key(5)
+    trace = deleda.run_deleda(cfg, key, corpus.words, corpus.mask, sched,
+                              degs, t, record_every=10,
+                              alive=jnp.asarray(alive))
+    assert int(trace.steps[3]) == 0
+    assert int(trace.steps.sum()) == 9 * t
+    # replicate run_deleda's init stream: node 3's stats never moved
+    k_init, _ = jax.random.split(key)
+    stats0 = jax.vmap(lambda k: init_stats(CFG, k))(
+        jax.random.split(k_init, n))
+    np.testing.assert_array_equal(np.asarray(trace.stats[3]),
+                                  np.asarray(stats0[3]))
+
+
+def test_async_steps_count_only_live_matched(corpus):
+    seq = _seq(2, 10)
+    sc = scn.Scenario(topology=seq, drop_prob=0.25, churn=0.25,
+                      churn_mean_down=4.0)
+    cs = sc.compile(np.random.default_rng(4))
+    sched, degs, alive = cs.run_inputs()
+    cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2)
+    trace = deleda.run_deleda(cfg, jax.random.key(6), corpus.words,
+                              corpus.mask, sched, degs, 20,
+                              record_every=10, alive=alive)
+    awake = int((cs.schedule.data != np.arange(10)).sum())
+    assert int(trace.steps.sum()) == awake
+
+
+def test_edge_sentinel_drops_no_wake(corpus):
+    """Edge-kind drops: the (i, i) sentinel must not mix or wake anyone."""
+    seq = scn.GraphSequence.static(complete_graph(10), 20)
+    sc = scn.Scenario(topology=seq, kind=comm.EDGE, drop_prob=0.4)
+    cs = sc.compile(np.random.default_rng(5))
+    sched, degs, alive = cs.run_inputs()
+    cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2)
+    trace = deleda.run_deleda(cfg, jax.random.key(7), corpus.words,
+                              corpus.mask, sched, degs, 20,
+                              record_every=10, alive=alive)
+    live = int((cs.schedule.data[:, 0] != cs.schedule.data[:, 1]).sum())
+    assert 0 < live < 20
+    assert int(trace.steps.sum()) == 2 * live
+
+
+def test_all_dropped_round_is_identity(corpus):
+    """A schedule of only idle rounds with no awake nodes changes nothing
+    between records (async: nobody mixes, nobody updates)."""
+    n, t = 10, 20
+    idle = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (t, n))
+    degs = jnp.asarray(complete_graph(n).degrees.astype(np.int32))
+    cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2)
+    trace = deleda.run_deleda(cfg, jax.random.key(8), corpus.words,
+                              corpus.mask, idle, degs, t, record_every=10,
+                              schedule_kind="matching")
+    assert int(trace.steps.sum()) == 0
+    np.testing.assert_array_equal(np.asarray(trace.history[0]),
+                                  np.asarray(trace.history[1]))
+
+
+def test_scenario_comm_backends_agree(corpus):
+    """Dropped/churned schedules run identically through dense and pallas
+    communicators (the no-op mask is plain schedule data)."""
+    seq = _seq(2, 10)
+    sc = scn.Scenario(topology=seq, drop_prob=0.2, churn=0.2)
+    cs = sc.compile(np.random.default_rng(6))
+    sched, degs, alive = cs.run_inputs()
+    traces = {}
+    for backend in comm.SIM_BACKENDS:
+        cfg = deleda.DeledaConfig(lda=CFG, mode="sync", batch_size=2,
+                                  comm_backend=backend)
+        traces[backend] = deleda.run_deleda(
+            cfg, jax.random.key(9), corpus.words, corpus.mask, sched,
+            degs, 20, record_every=10, alive=alive)
+    np.testing.assert_allclose(np.asarray(traces["dense"].stats),
+                               np.asarray(traces["pallas"].stats),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(traces["dense"].steps),
+                                  np.asarray(traces["pallas"].steps))
+
+
+def test_per_step_degrees_match_static_on_static_graph(corpus):
+    """[T, n] degrees that repeat the static row must reproduce the [n]
+    result bit-for-bit (same corrections, same trajectory)."""
+    n, t = 10, 20
+    g = ring_graph(n)
+    sched, degs = deleda.make_run_inputs(g, t, seed=1, kind="edge")
+    cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2)
+    tr_static = deleda.run_deleda(cfg, jax.random.key(10), corpus.words,
+                                  corpus.mask, sched, degs, t,
+                                  record_every=10)
+    degs_t = jnp.broadcast_to(degs, (t, n))
+    tr_t = deleda.run_deleda(cfg, jax.random.key(10), corpus.words,
+                             corpus.mask, sched, degs_t, t,
+                             record_every=10)
+    np.testing.assert_array_equal(np.asarray(tr_static.stats),
+                                  np.asarray(tr_t.stats))
+
+
+# ---------------------------------------------------------------------------
+# The acceptance property: one jit compilation for every regime
+# ---------------------------------------------------------------------------
+
+def test_time_varying_schedule_compiles_once(corpus):
+    """Static and rewired schedules (and different drop/churn masks) of
+    the same shape must hit ONE compiled run_deleda trace — dynamic
+    topologies are data, not new programs."""
+    # a config signature unique to this test so the cache delta is ours
+    cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=3)
+    t = 20
+    static = scn.Scenario(
+        topology=scn.GraphSequence.static(_ws(0), t), name="s")
+    rewired = scn.Scenario(topology=_seq(4, 5), drop_prob=0.2,
+                           churn=0.2, name="r")
+    before = deleda.run_deleda._cache_size()
+    for i, sc in enumerate((static, rewired)):
+        sched, degs, alive = sc.compile(
+            np.random.default_rng(i)).run_inputs()
+        deleda.run_deleda(cfg, jax.random.key(11), corpus.words,
+                          corpus.mask, sched, degs, t, record_every=10,
+                          alive=alive)
+    assert deleda.run_deleda._cache_size() - before == 1
+
+
+def test_paper_scenario_registry():
+    for name in scn.SCENARIO_NAMES:
+        sc = scn.paper_scenario(name, n=12, n_steps=20, seed=0)
+        assert sc.name == name
+        assert sc.n_steps == 20
+        assert sc.topology.n_nodes == 12
+    assert scn.paper_scenario("rewiring", n=12, n_steps=20).topology \
+        .n_segments == 5
+    assert scn.paper_scenario("noniid", n=12, n_steps=20).topic_skew \
+        is not None

@@ -1,0 +1,114 @@
+"""Property-based schedule tests (hypothesis via hyputil, skip-clean
+without it): maximal matchings, uniform edge draws, segment liveness."""
+
+import numpy as np
+from hyputil import HAVE_HYPOTHESIS, given, settings, st
+from statutil import chi2_critical, chi2_statistic
+
+from repro.core import comm, gossip
+from repro.core import scenario as scn
+from repro.core.graph import (Graph, erdos_renyi_graph, random_matching,
+                              watts_strogatz_graph)
+
+
+def _assert_valid_maximal_matching(graph: Graph, partners: np.ndarray):
+    n = graph.n_nodes
+    ident = np.arange(n)
+    np.testing.assert_array_equal(partners[partners], ident)  # involution
+    edge_set = {(int(a), int(b)) for a, b in graph.edges}
+    edge_set |= {(b, a) for a, b in edge_set}
+    for i, p in enumerate(partners):
+        if p != i:
+            assert (i, int(p)) in edge_set          # only real edges
+    unmatched = partners == ident
+    for a, b in graph.edges:                        # maximality: no edge
+        assert not (unmatched[a] and unmatched[b])  # between two idles
+
+
+# ---------------------------------------------------------------------------
+# draw_matching_schedule / random_matching: always valid MAXIMAL matchings
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 24), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_matching_schedule_always_valid_maximal(n, seed):
+    g = erdos_renyi_graph(n, 0.5, seed=seed % 100)
+    m = gossip.draw_matching_schedule(g, 4, np.random.default_rng(seed))
+    for row in m:
+        _assert_valid_maximal_matching(g, row)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_random_matching_always_maximal(seed):
+    g = watts_strogatz_graph(16, 4, 0.3, seed=seed % 50)
+    pairs = random_matching(g, np.random.default_rng(seed))
+    partners = np.arange(g.n_nodes)
+    partners[pairs[:, 0]] = pairs[:, 1]
+    partners[pairs[:, 1]] = pairs[:, 0]
+    _assert_valid_maximal_matching(g, partners)
+
+
+# ---------------------------------------------------------------------------
+# Edge schedules are uniform over E (frequency chi-square)
+# ---------------------------------------------------------------------------
+
+def test_edge_schedule_uniform_over_edges():
+    g = watts_strogatz_graph(12, 4, 0.3, seed=0)
+    t = 400 * g.n_edges                       # ~400 expected hits per edge
+    sched = gossip.draw_edge_schedule(g, t, np.random.default_rng(1))
+    key = {(int(a), int(b)): e for e, (a, b) in enumerate(g.edges)}
+    counts = np.zeros(g.n_edges)
+    for a, b in np.sort(sched, axis=1):
+        counts[key[(int(a), int(b))]] += 1
+    stat = chi2_statistic(counts, np.full(g.n_edges, 1.0 / g.n_edges))
+    assert stat < chi2_critical(g.n_edges - 1), stat
+
+
+def test_matching_rounds_cover_edges_without_bias():
+    """Over many rounds every edge of a regular-ish graph gets matched a
+    comparable number of times (no starving edge)."""
+    g = watts_strogatz_graph(12, 4, 0.3, seed=2)
+    m = gossip.draw_matching_schedule(g, 600, np.random.default_rng(3))
+    counts = np.zeros(g.n_edges)
+    key = {(int(a), int(b)): e for e, (a, b) in enumerate(g.edges)}
+    for row in m:
+        for i, p in enumerate(row):
+            if i < p:
+                counts[key[(i, int(p))]] += 1
+    assert counts.min() > 0, "some edge never matched in 600 rounds"
+    assert counts.max() / counts.min() < 12.0
+
+
+# ---------------------------------------------------------------------------
+# Time-varying schedules only activate edges alive in their segment
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.integers(2, 4), st.integers(3, 8))
+@settings(max_examples=20, deadline=None)
+def test_time_varying_rounds_use_only_segment_edges(seed, n_seg, steps):
+    seq = scn.GraphSequence.rewiring(
+        lambda s: erdos_renyi_graph(10, 0.5, seed=s), n_seg, steps,
+        seed=seed % 100)
+    sched = seq.draw_schedule(comm.MATCHING, np.random.default_rng(seed))
+    partners, seg = sched.data, sched.segments
+    for t in range(sched.n_rounds):
+        live = {(int(a), int(b)) for a, b in seq.graphs[seg[t]].edges}
+        live |= {(b, a) for a, b in live}
+        for i, p in enumerate(partners[t]):
+            if p != i:
+                assert (i, int(p)) in live, (t, int(seg[t]), i, int(p))
+
+
+def test_segment_metadata_survives_as_matchings():
+    seq = scn.GraphSequence.rewiring(
+        lambda s: erdos_renyi_graph(8, 0.6, seed=s), 3, 4)
+    es = seq.draw_schedule(comm.EDGE, np.random.default_rng(0))
+    ms = es.as_matchings()
+    np.testing.assert_array_equal(ms.segments, es.segments)
+    assert ms.n_segments == 3
+
+
+def test_hypothesis_shim_visible():
+    """Make the shim state explicit in the report (not a real property)."""
+    assert HAVE_HYPOTHESIS in (True, False)
