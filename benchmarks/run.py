@@ -71,6 +71,14 @@ def main(argv=None):
     sections.append("scenarios")
 
     print("=" * 72)
+    print("scale: vocab-sharded vs dense (blocked E-step, sharded carry)")
+    print("=" * 72)
+    from benchmarks import scale_bench
+    scale_bench.main([] if args.scale == "paper"
+                     else ["--regimes", "paper", "mid"])
+    sections.append("scale")
+
+    print("=" * 72)
     print("gossip vs all-reduce collective bytes (model)")
     print("=" * 72)
     from benchmarks import gossip_collectives

@@ -1,0 +1,198 @@
+"""Scale-layer benchmark: vocab-sharded vs dense at n>=512, V>=10k.
+
+The paper validates at n=50 nodes / toy vocabularies; the production
+regimes of the privacy placement are many nodes and 10k-100k-word
+vocabularies, where every O(K*V)-per-node temporary is the wall. This
+bench sweeps three regimes
+
+    paper  n=50,   V=1k    (the oracle point — sharded asserted == dense)
+    mid    n=512,  V=10k   (one host, the acceptance floor)
+    big    n=1024, V=50k   (one host, 0.8 GB of statistics)
+
+and two variants of the per-round local-update hot path:
+
+    dense    materialize eta_star(stats) [n, K, V], gather beta columns
+             from it (the pre-Scale-layer path);
+    blocked  gather the minibatch's beta[:, words] columns straight from
+             the (vocab-sharded) statistic — `estep_batch_from_stats`,
+             O(B*L*K) gathered values + an [n, K] fused row-sum, the
+             O(n*K*V) topic matrix never exists.
+
+Both variants are asserted allclose at every regime before timing, the
+full sharded `run_deleda` is timed end-to-end per regime (the n>=512 /
+V>=10k acceptance criterion is that it completes on one host), and at
+paper scale the sharded run is asserted against the dense-oracle run.
+Rows also record the comm layer's modeled wire bytes per matching round
+(total unchanged under sharding; per-link payload drops by S).
+
+Usage: PYTHONPATH=src python -m benchmarks.scale_bench [--regimes paper]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm as comm_mod
+from repro.core import deleda, estep as estep_mod
+from repro.core.graph import watts_strogatz_graph
+from repro.core.lda import LDAConfig, eta_star, init_stats
+
+REGIMES = {
+    "paper": dict(n=50, v=1000, k=5, b=20, l=32, n_gibbs=30, burnin=15,
+                  shards=8, steps=8, iters=3),
+    "mid": dict(n=512, v=10_000, k=5, b=4, l=16, n_gibbs=6, burnin=3,
+                shards=8, steps=4, iters=2),
+    "big": dict(n=1024, v=50_000, k=4, b=2, l=16, n_gibbs=4, burnin=2,
+                shards=16, steps=2, iters=1),
+}
+
+
+def _timeit(fn, *args, iters=2):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def bench_estep_paths(cfg: LDAConfig, rg: dict) -> dict:
+    """Dense-materialized vs blocked-stats fused E-step, all n nodes awake
+    (the matching-round hot path of run_deleda)."""
+    n, b, l = rg["n"], rg["b"], rg["l"]
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(0), i))(
+        jnp.arange(n))
+    words = jax.random.randint(jax.random.key(1), (n, b, l), 0,
+                               cfg.vocab_size)
+    mask = jax.random.uniform(jax.random.key(2), (n, b, l)) < 0.9
+    stats = jax.vmap(lambda k: init_stats(cfg, k))(
+        jax.random.split(jax.random.key(3), n))
+    backend = estep_mod.get_estep("dense")
+
+    dense = jax.jit(lambda kk, w, m, st: estep_mod.estep_batch(
+        backend, cfg, kk, w, m, eta_star(st, cfg.tau)))
+    blocked = jax.jit(lambda kk, w, m, st: estep_mod.estep_batch_from_stats(
+        backend, cfg, kk, w, m, st))
+
+    t_d, out_d = _timeit(dense, keys, words, mask, stats,
+                         iters=rg["iters"])
+    t_b, out_b = _timeit(blocked, keys, words, mask, stats,
+                         iters=rg["iters"])
+    err = float(jnp.abs(out_d - out_b).max())
+    assert err < 1e-5, f"blocked E-step diverged from dense oracle: {err}"
+    del out_d, out_b
+    return dict(dense_s=t_d, blocked_s=t_b,
+                blocked_speedup=round(t_d / t_b, 3), max_abs_err=err)
+
+
+def _make_run_inputs(cfg: LDAConfig, rg: dict, docs_per_node: int = 8):
+    n = rg["n"]
+    words = jax.random.randint(jax.random.key(4),
+                               (n, docs_per_node, rg["l"]), 0,
+                               cfg.vocab_size)
+    mask = jax.random.uniform(jax.random.key(5),
+                              (n, docs_per_node, rg["l"])) < 0.9
+    graph = watts_strogatz_graph(n, 4, 0.3, seed=0)
+    sched, degs = deleda.make_run_inputs(graph, rg["steps"], seed=0,
+                                         kind="matching")
+    return words, mask, sched, degs
+
+
+def bench_run_deleda(cfg: LDAConfig, rg: dict, vocab_shards: int,
+                     run_inputs) -> dict:
+    words, mask, sched, degs = run_inputs
+    dcfg = deleda.DeledaConfig(lda=cfg, mode="sync", batch_size=rg["b"],
+                               vocab_shards=vocab_shards)
+    t0 = time.time()
+    trace = deleda.run_deleda(dcfg, jax.random.key(6), words, mask, sched,
+                              degs, rg["steps"],
+                              record_every=rg["steps"])
+    jax.block_until_ready(trace.stats)
+    wall = time.time() - t0            # includes the one-off jit compile
+    t_run, trace = _timeit(
+        lambda: deleda.run_deleda(dcfg, jax.random.key(6), words, mask,
+                                  sched, degs, rg["steps"],
+                                  record_every=rg["steps"]),
+        iters=rg["iters"])
+    return dict(total_s=t_run, s_per_step=t_run / rg["steps"],
+                first_call_s=wall, trace=trace)
+
+
+def wire_bytes(rg: dict, sched_row: np.ndarray, itemsize: int = 4) -> dict:
+    """Modeled bytes on the wire for one matching round (comm layer)."""
+    n, k, v, s = rg["n"], rg["k"], rg["v"], rg["shards"]
+    cx = comm_mod.DenseSimComm()
+    total = cx.bytes_per_round((n, k, s, v // s), itemsize, sched_row)
+    assert total == cx.bytes_per_round((n, k, v), itemsize, sched_row)
+    return dict(bytes_per_round=int(total),
+                shard_payload_bytes=k * (v // s) * itemsize,
+                dense_payload_bytes=k * v * itemsize)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regimes", nargs="*", default=sorted(REGIMES),
+                    choices=sorted(REGIMES))
+    ap.add_argument("-o", "--out", default="BENCH_scale.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for name in args.regimes:
+        rg = REGIMES[name]
+        cfg = LDAConfig(n_topics=rg["k"], vocab_size=rg["v"], alpha=0.5,
+                        doc_len_max=rg["l"], n_gibbs=rg["n_gibbs"],
+                        n_gibbs_burnin=rg["burnin"])
+        print(f"--- {name}: n={rg['n']} V={rg['v']} K={rg['k']} "
+              f"shards={rg['shards']} "
+              f"(stats {rg['n']*rg['k']*rg['v']*4/1e9:.2f} GB)")
+
+        ep = bench_estep_paths(cfg, rg)
+        print(f"    estep  dense {ep['dense_s']*1e3:9.1f} ms   "
+              f"blocked {ep['blocked_s']*1e3:9.1f} ms   "
+              f"speedup {ep['blocked_speedup']:5.2f}x  "
+              f"(max err {ep['max_abs_err']:.2e})")
+
+        run_inputs = _make_run_inputs(cfg, rg)
+        run_sharded = bench_run_deleda(cfg, rg, rg["shards"], run_inputs)
+        print(f"    run_deleda[sharded x{rg['shards']}] "
+              f"{run_sharded['s_per_step']*1e3:9.1f} ms/step "
+              f"({rg['steps']} steps, first call "
+              f"{run_sharded['first_call_s']:.1f}s)")
+
+        allclose_dense = None
+        if name == "paper":
+            run_dense = bench_run_deleda(cfg, rg, 1, run_inputs)
+            err = float(jnp.abs(run_dense["trace"].stats
+                                - run_sharded["trace"].stats).max())
+            assert err < 1e-4, f"sharded run diverged from dense: {err}"
+            allclose_dense = err
+            print(f"    run_deleda[dense]      "
+                  f"{run_dense['s_per_step']*1e3:9.1f} ms/step   "
+                  f"sharded == dense oracle (max err {err:.2e})")
+
+        wb = wire_bytes(rg, np.asarray(run_inputs[2])[0])
+        rows.append(dict(
+            regime=name, n=rg["n"], v=rg["v"], k=rg["k"],
+            vocab_shards=rg["shards"], steps=rg["steps"],
+            estep_dense_s=round(ep["dense_s"], 4),
+            estep_blocked_s=round(ep["blocked_s"], 4),
+            estep_blocked_speedup=ep["blocked_speedup"],
+            run_s_per_step=round(run_sharded["s_per_step"], 4),
+            sharded_vs_dense_max_err=allclose_dense, **wb))
+
+    payload = dict(backend_platform=jax.default_backend(), rows=rows)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

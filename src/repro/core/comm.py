@@ -27,6 +27,20 @@ Statistics enter the consensus linearly (exactly the property exploited by
 Campbell & How's approximate decentralized Bayes and by Cyffers & Bellet's
 privacy amplification), so all three backends compute the *same* averaging
 map and are asserted equivalent in tests/test_comm.py.
+
+**Vocab sharding (the Scale layer).** Gossip averaging is row-linear in
+the statistic, so splitting the vocab axis into S blocks splits one
+matching round into S *independent* per-shard rounds that may live on
+different devices or mix as separate blocks. Every backend accepts
+vocab-sharded statistics ``[n, K, S, V/S]`` next to the dense
+``[n, K, V]``: the sim backends treat the shard axis as layout (dense is
+shard-oblivious; the Pallas kernel streams the flattened contiguous
+``[n, K, S*V/S]`` view, identical floats), and :class:`MeshComm` built on
+a 2-D node x vocab device grid (``vocab_axis=...``) routes each matching
+round as per-shard one-hop ppermutes over the NODE axis — every vocab
+shard of a matched pair exchanges its own [K, V/S] block in parallel, so
+the per-link payload drops by S while total wire bytes stay put
+(``bytes_per_round`` accounts per-shard payloads).
 """
 
 from __future__ import annotations
@@ -45,7 +59,8 @@ from repro.core.graph import Graph
 
 __all__ = [
     "GossipSchedule", "Communicator", "DenseSimComm", "PallasSimComm",
-    "MeshComm", "get_communicator", "mesh_round", "SIM_BACKENDS",
+    "MeshComm", "get_communicator", "make_grid_mesh", "mesh_round",
+    "SIM_BACKENDS",
 ]
 
 # One gossip round over a mesh axis, usable *inside* shard_map (this is the
@@ -223,8 +238,12 @@ class DenseSimComm:
 class PallasSimComm:
     """Routes mixing through the kernels/gossip_mix scalar-prefetch kernel.
 
-    Requires [n, K, V]-shaped statistics (the kernel streams [1, K, V_blk]
-    tiles). ``interpret=None`` auto-detects: compiled on TPU, interpreter
+    The kernel streams [1, K, V_blk] tiles of [n, K, V]-shaped statistics.
+    Vocab-sharded [n, K, S, V/S] statistics are accepted too: the shard
+    axis is contiguous layout, so the kernel streams the flattened
+    [n, K, S*V/S] view — identical floats, and the V-block tiling already
+    never crosses what a shard boundary would be when V/S divides the
+    block. ``interpret=None`` auto-detects: compiled on TPU, interpreter
     elsewhere — see kernels/gossip_mix/ops.py.
     """
 
@@ -236,9 +255,16 @@ class PallasSimComm:
 
     def mix_matching(self, stats, partners):
         from repro.kernels.gossip_mix import ops as gossip_mix_ops
-        return gossip_mix_ops.mix_matching(
+        shape = stats.shape
+        if stats.ndim == 4:                       # vocab-sharded layout
+            stats = stats.reshape(shape[0], shape[1], -1)
+        elif stats.ndim != 3:
+            raise ValueError(f"pallas mixing wants [n, K, V] or vocab-"
+                             f"sharded [n, K, S, V/S] stats, got {shape}")
+        out = gossip_mix_ops.mix_matching(
             stats, jnp.asarray(partners, jnp.int32),
             block_v=self.block_v, interpret=self.interpret)
+        return out.reshape(shape)
 
     def mix_edge(self, stats, i, j):
         n = stats.shape[0]
@@ -255,6 +281,13 @@ class PallasSimComm:
 # ----------------------------------------------------------------------------
 # Mesh backend: ppermute pair exchanges over a named axis
 # ----------------------------------------------------------------------------
+
+def make_grid_mesh(n_node_devices: int, n_vocab_devices: int,
+                   axis_names: tuple[str, str] = ("data", "vocab")):
+    """A 2-D node x vocab device grid for vocab-sharded MeshComm gossip."""
+    return compat.make_mesh((n_node_devices, n_vocab_devices), axis_names,
+                            axis_types=compat.auto_axis_types(2))
+
 
 def _route_matching(partners: np.ndarray, n_dev: int):
     """Decompose one matching into intra-device mixing + ppermute passes.
@@ -327,29 +360,54 @@ class MeshComm:
     indices stay traced, so two rounds sharing a device permutation share a
     compilation.
 
+    ``vocab_axis`` names the second mesh axis of a 2-D node x vocab device
+    grid (:func:`make_grid_mesh`): statistics are then ALSO sharded over
+    the vocab axis — the last axis of dense [n, K, V] stats, the shard
+    axis of vocab-sharded [n, K, S, V/S] stats — and each ppermute pass
+    exchanges every vocab shard's own block over the node axis in
+    parallel. Gossip is row-linear, so the per-shard rounds compose to
+    exactly the dense averaging map.
+
     For code already *inside* shard_map, use :func:`mesh_round` directly.
     """
 
     name = "mesh"
 
-    def __init__(self, mesh=None, axis_name: str = "data"):
+    def __init__(self, mesh=None, axis_name: str = "data",
+                 vocab_axis: str | None = None):
         if mesh is None:
             n = len(jax.devices())
             mesh = compat.make_mesh((n,), (axis_name,),
                                     axis_types=compat.auto_axis_types(1))
         self.mesh = mesh
         self.axis_name = axis_name
+        self.vocab_axis = vocab_axis
         self.n_devices = int(dict(mesh.shape)[axis_name])
+        self.n_vocab_shards = (1 if vocab_axis is None
+                               else int(dict(mesh.shape)[vocab_axis]))
         self._pass_fns: dict[tuple, object] = {}
-        self._local_fn = None
+        self._local_fns: dict[int, object] = {}
 
     # -- jitted building blocks ---------------------------------------------
 
     def _node_spec(self):
         return P(self.axis_name)
 
-    def _get_local_fn(self):
-        if self._local_fn is None:
+    def _stats_spec(self, ndim: int):
+        """Node axis leading; vocab axis (if any) on V for dense [n, K, V]
+        stats and on S for vocab-sharded [n, K, S, V/S] stats."""
+        spec = [self.axis_name] + [None] * (ndim - 1)
+        if self.vocab_axis is not None:
+            if ndim < 3:
+                raise ValueError(
+                    f"vocab-sharded MeshComm needs [n, K, V] or "
+                    f"[n, K, S, V/S] stats, got ndim={ndim}")
+            spec[2 if ndim >= 4 else ndim - 1] = self.vocab_axis
+        return P(*spec)
+
+    def _get_local_fn(self, ndim: int):
+        fn = self._local_fns.get(ndim)
+        if fn is None:
             node = self._node_spec()
 
             def local_mix(stats, src, active):
@@ -357,13 +415,15 @@ class MeshComm:
                 keep = active.reshape((-1,) + (1,) * (stats.ndim - 1))
                 return jnp.where(keep, mixed, stats)
 
-            self._local_fn = jax.jit(compat.shard_map(
+            stats_spec = self._stats_spec(ndim)
+            fn = jax.jit(compat.shard_map(
                 local_mix, mesh=self.mesh,
-                in_specs=(node, node, node), out_specs=node))
-        return self._local_fn
+                in_specs=(stats_spec, node, node), out_specs=stats_spec))
+            self._local_fns[ndim] = fn
+        return fn
 
-    def _get_pass_fn(self, perm: tuple):
-        fn = self._pass_fns.get(perm)
+    def _get_pass_fn(self, perm: tuple, ndim: int = 3):
+        fn = self._pass_fns.get((perm, ndim))
         if fn is None:
             node = self._node_spec()
             axis = self.axis_name
@@ -375,10 +435,11 @@ class MeshComm:
                 keep = active.reshape((-1,) + (1,) * (stats.ndim - 1))
                 return jnp.where(keep, mixed, stats)
 
+            stats_spec = self._stats_spec(ndim)
             fn = jax.jit(compat.shard_map(
                 exchange, mesh=self.mesh,
-                in_specs=(node, node, node), out_specs=node))
-            self._pass_fns[perm] = fn
+                in_specs=(stats_spec, node, node), out_specs=stats_spec))
+            self._pass_fns[(perm, ndim)] = fn
         return fn
 
     # -- Communicator interface ---------------------------------------------
@@ -388,10 +449,10 @@ class MeshComm:
         (intra_src, intra_active), passes = _route_matching(
             partners, self.n_devices)
         if intra_active.any():
-            stats = self._get_local_fn()(
+            stats = self._get_local_fn(stats.ndim)(
                 stats, jnp.asarray(intra_src), jnp.asarray(intra_active))
         for perm, remote_src, active in passes:
-            stats = self._get_pass_fn(perm)(
+            stats = self._get_pass_fn(perm, stats.ndim)(
                 stats, jnp.asarray(remote_src), jnp.asarray(active))
         return stats
 
@@ -403,11 +464,16 @@ class MeshComm:
         return self.mix_matching(stats, p)
 
     def bytes_per_round(self, stats_shape, itemsize, partners):
-        # each ppermute pass moves the full local block per involved device
+        # each ppermute pass moves one PER-SHARD local block per involved
+        # (node-axis) device — all n_vocab_shards shards of a matched pair
+        # exchange in parallel, so the per-link payload is 1/S of the dense
+        # block while the round total is unchanged
         _, passes = _route_matching(np.asarray(partners), self.n_devices)
         n_local = stats_shape[0] // self.n_devices
-        block = n_local * _pair_payload_bytes(stats_shape, itemsize)
-        return sum(len(perm) * block for perm, _, _ in passes)
+        shard_block = (n_local * _pair_payload_bytes(stats_shape, itemsize)
+                       // self.n_vocab_shards)
+        return sum(len(perm) * self.n_vocab_shards * shard_block
+                   for perm, _, _ in passes)
 
 
 SIM_BACKENDS = ("dense", "pallas")

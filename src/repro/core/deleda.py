@@ -61,7 +61,7 @@ from repro.core import comm as comm_mod
 from repro.core import estep as estep_mod
 from repro.core import gossip
 from repro.core.graph import Graph
-from repro.core.lda import LDAConfig, eta_star, init_stats
+from repro.core.lda import LDAConfig, init_stats
 from repro.core.oem import make_rho_schedule
 
 
@@ -79,10 +79,18 @@ class DeledaConfig:
     use_pallas: bool = False         # DEPRECATED alias for estep_backend
     comm_backend: str = "dense"      # gossip mixing: "dense" | "pallas"
     estep_backend: str = "dense"     # local E-steps: "dense" | "pallas"
+    vocab_shards: int = 1            # Scale layer: split V into S blocks
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {self.mode!r}")
+        if self.vocab_shards < 1:
+            raise ValueError(f"vocab_shards must be >= 1, "
+                             f"got {self.vocab_shards}")
+        if self.lda.vocab_size % self.vocab_shards:
+            raise ValueError(
+                f"vocab_shards={self.vocab_shards} must divide "
+                f"vocab_size={self.lda.vocab_size}")
         if self.use_pallas:
             warnings.warn(
                 "DeledaConfig.use_pallas is deprecated; use "
@@ -151,6 +159,17 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     counter stays frozen. Dropped gossip events need no extra input: they
     are encoded in the schedule itself (self-partner rows / ``(i, i)`` edge
     sentinels) and skip the mix and — async — the wake-up.
+
+    ``config.vocab_shards = S`` (the Scale layer) carries the statistics
+    vocab-sharded as [n, K, S, V/S] through the SAME single-jit scan: the
+    comm layer mixes each V-shard independently (gossip is row-linear) and
+    the E-step gathers only the minibatch's beta columns from the sharded
+    statistic (``estep.estep_batch_from_stats``) instead of materializing
+    the dense [n, K, V] topic matrix each iteration. The trajectory
+    matches the dense run to a few ulps (only the blocked denominator
+    reduce may re-associate across shards; mixing, gathers, scatters and
+    blends are elementwise or identical-order) and the returned trace is
+    always densely shaped.
     """
     if n_steps % record_every != 0:
         raise ValueError("n_steps must be divisible by record_every")
@@ -160,10 +179,21 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     estep = estep_mod.get_estep(config.estep_backend)
     rho_fn = make_rho_schedule(config.rho_kind, kappa=config.rho_kappa,
                                t0=config.rho_t0)
+    n_topics, vocab = config.lda.n_topics, config.lda.vocab_size
+    shards = config.vocab_shards
+
+    def bcast(rows, ndim):
+        # [n]-shaped masks/steps against the (possibly vocab-sharded) stats
+        return rows.reshape((-1,) + (1,) * (ndim - 1))
 
     k_init, k_run = jax.random.split(key)
     stats0 = jax.vmap(lambda k: init_stats(config.lda, k))(
         jax.random.split(k_init, n))                    # [n, K, V]
+    if shards > 1:
+        # the sharded carry: [n, K, S, V/S] — a pure layout reshape (V is
+        # contiguous), so the dense and sharded trajectories are the same
+        # floats and every consumer below is shard-oblivious
+        stats0 = stats0.reshape(n, n_topics, shards, vocab // shards)
     steps0 = jnp.zeros((n,), jnp.int32)
     node_ids = jnp.arange(n, dtype=jnp.int32)
 
@@ -213,12 +243,16 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
                                            w_, m_))(
             ids, words_rows, mask_rows)                   # [A, B, L]
         keys = jax.vmap(lambda i: jax.random.fold_in(k_gibbs, i))(ids)
-        beta = eta_star(stats_rows, config.lda.tau)       # [A, K, V]
-        stats_hat = estep_mod.estep_batch(estep, config.lda, keys, bw, bm,
-                                          beta)           # [A, K, V]
+        # blocked-stats E-step: beta columns are gathered straight from
+        # the (possibly vocab-sharded) statistic — no dense [A, K, V]
+        # eta_star temporary; bitwise-equal to the materialized path
+        stats_hat = estep_mod.estep_batch_from_stats(
+            estep, config.lda, keys, bw, bm, stats_rows)  # [A, K, V]
+        stats_hat = stats_hat.reshape(stats_rows.shape)
         t = steps_rows + 1
         rho = (rho_fn(t) * corr_rows).astype(stats_rows.dtype)
-        rho = jnp.clip(rho, 0.0, 1.0)[:, None, None]
+        rho = jnp.clip(rho, 0.0, 1.0)
+        rho = bcast(rho, stats_rows.ndim)
         return (1.0 - rho) * stats_rows + rho * stats_hat, t
 
     def iteration(carry, inp):
@@ -240,7 +274,7 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
                 new_stats, new_steps = update_rows(
                     stats, steps, node_ids, k_sel, k_gibbs, words, mask,
                     corr)
-                stats = jnp.where(al[:, None, None], new_stats, stats)
+                stats = jnp.where(bcast(al, stats.ndim), new_stats, stats)
                 steps = jnp.where(al, new_steps, steps)
             else:
                 # -- only the two awake nodes update (async variant)
@@ -249,7 +283,7 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
                     stats[active], steps[active], active, k_sel, k_gibbs,
                     words[active], mask[active], corr[active])
                 upd = jnp.stack([ev_live, ev_live])
-                up_stats = jnp.where(upd[:, None, None], up_stats,
+                up_stats = jnp.where(bcast(upd, up_stats.ndim), up_stats,
                                      stats[active])
                 up_steps = jnp.where(upd, up_steps, steps[active])
                 stats = stats.at[active].set(up_stats)
@@ -268,7 +302,7 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
             else:
                 # matched live nodes are the awake ones this round
                 upd = (partners != node_ids) & al
-            stats = jnp.where(upd[:, None, None], new_stats, stats)
+            stats = jnp.where(bcast(upd, stats.ndim), new_stats, stats)
             steps = jnp.where(upd, new_steps, steps)
 
         return (stats, steps), None
@@ -279,7 +313,11 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
         return carry, (stats, gossip.consensus_distance(stats))
 
     n_rec = n_steps // record_every
-    keys = jax.random.split(k_run, n_steps).reshape(n_rec, record_every)
+    # keep trailing dims: typed jax.random.key arrays split to [T] but
+    # legacy jax.random.PRNGKey arrays split to [T, 2] — a bare
+    # reshape(n_rec, record_every) crashes on the legacy flavor
+    keys = jax.random.split(k_run, n_steps)
+    keys = keys.reshape((n_rec, record_every) + keys.shape[1:])
     event_blocks = schedule.reshape(n_rec, record_every,
                                     schedule.shape[-1])
     alive_blocks = alive_t.reshape(n_rec, record_every, n)
@@ -287,6 +325,11 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     (stats, steps), (history, consensus) = jax.lax.scan(
         record_block, (stats0, steps0),
         (event_blocks, keys, alive_blocks, corr_blocks))
+    if shards > 1:
+        # externally the trace is always dense [.., K, V]; the shard axis
+        # was contiguous layout only, so this reshape is free
+        stats = stats.reshape(n, n_topics, vocab)
+        history = history.reshape(n_rec, n, n_topics, vocab)
     return DeledaTrace(stats=stats, steps=steps, history=history,
                        consensus=consensus)
 

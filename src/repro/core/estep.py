@@ -46,8 +46,9 @@ from repro.core.lda import LDAConfig
 __all__ = [
     "GibbsResult", "sample_from_unnormalized", "gibbs_position_update",
     "gibbs_sweeps_dense", "draw_gibbs_randoms", "stats_from_per_pos",
-    "DenseEStep", "PallasEStep", "get_estep", "ESTEP_BACKENDS",
-    "estep_batch",
+    "beta_w_from_stats", "DenseEStep", "PallasEStep", "get_estep",
+    "ESTEP_BACKENDS", "fused_sweeps", "estep_batch",
+    "estep_batch_from_stats",
 ]
 
 
@@ -157,13 +158,51 @@ def draw_gibbs_randoms(config: LDAConfig, key: jax.Array, b: int, l: int,
 
 
 def stats_from_per_pos(words: jax.Array, per_pos: jax.Array,
-                       vocab_size: int) -> jax.Array:
-    """Scatter [B, L, K] per-position stats into the per-doc-mean [K, V]."""
+                       vocab_size: int,
+                       maskf: jax.Array | None = None) -> jax.Array:
+    """Scatter [B, L, K] per-position stats into the per-doc-mean [K, V].
+
+    ``maskf`` ([B, L] float document mask) sets the mean's denominator to
+    the number of NON-EMPTY documents in the batch (guarded against zero):
+    a batch padded with all-masked documents contributes nothing to the
+    scatter, so dividing by the full batch size would silently bias the
+    per-document-mean statistic low. Without ``maskf`` the legacy
+    full-batch-size normalization is kept (correct only for unpadded
+    batches).
+    """
     b, _l, k = per_pos.shape
     flat_w = words.reshape(-1)
     flat_p = per_pos.reshape(-1, k)
     stats = jnp.zeros((k, vocab_size), per_pos.dtype)
-    return stats.at[:, flat_w].add(flat_p.T) / b
+    if maskf is None:
+        denom = jnp.asarray(b, per_pos.dtype)
+    else:
+        n_nonempty = (maskf.sum(-1) > 0).sum()
+        denom = jnp.maximum(n_nonempty, 1).astype(per_pos.dtype)
+    return stats.at[:, flat_w].add(flat_p.T) / denom
+
+
+def beta_w_from_stats(stats: jax.Array, words: jax.Array,
+                      tau: float) -> jax.Array:
+    """Likelihood rows beta[:, words] gathered straight from the statistic.
+
+    The blocked-stats gather of the Scale layer: the E-step only ever
+    consumes the O(B*L) columns of the topic matrix that its minibatch
+    words hit, so at large V materializing the full [K, V] ``eta_star``
+    output is pure waste. This computes ``denom = sum_v (s + tau)`` as a
+    fused reduction and gathers+normalizes just the needed columns —
+    bitwise-equal to ``jnp.take(eta_star(stats, tau).T, words, axis=0)``
+    (gather-then-divide of the identical floats).
+
+    stats: [K, V] or vocab-sharded [K, S, V/S] (trailing axes are flattened
+    — the shard axis is a pure layout axis); words: [B, L] int32.
+    Returns beta_w [B, L, K].
+    """
+    k = stats.shape[0]
+    stats = stats.reshape(k, -1)
+    denom = (stats + tau).sum(-1)                         # [K]
+    cols = jnp.moveaxis(stats[:, words], 0, -1)           # [B, L, K]
+    return (cols + tau) / denom
 
 
 # ----------------------------------------------------------------------------
@@ -191,7 +230,8 @@ class _EStepBase:
             beta_w, maskf, uniforms, z0, alpha=config.alpha,
             n_sweeps=config.n_gibbs, burnin=config.n_gibbs_burnin,
             rao_blackwell=rao_blackwell)
-        stats = stats_from_per_pos(words, per_pos, config.vocab_size)
+        stats = stats_from_per_pos(words, per_pos, config.vocab_size,
+                                   maskf)
         n_dk = jnp.einsum("blk,bl->bk", _one_hot(z, k, beta.dtype), maskf)
         theta = ndk_mean + config.alpha
         theta = theta / theta.sum(-1, keepdims=True)
@@ -259,6 +299,32 @@ def get_estep(name: str, **kwargs) -> _EStepBase:
 # Fused multi-node batch path
 # ----------------------------------------------------------------------------
 
+def fused_sweeps(backend: _EStepBase, config: LDAConfig, keys: jax.Array,
+                 beta_w: jax.Array, maskf: jax.Array,
+                 rao_blackwell: bool = True) -> jax.Array:
+    """The fused-sweeps core: A nodes' minibatches as ONE [A*B, L] call.
+
+    keys [A] per-node PRNG streams, beta_w [A, B, L, K] pre-gathered
+    likelihood rows, maskf [A, B, L] float. Returns per-position statistics
+    [A, B, L, K]. Shared by :func:`estep_batch` (dense beta),
+    :func:`estep_batch_from_stats` (blocked gather) and the mesh
+    launcher's node x vocab grid (which psum-assembles beta_w across the
+    vocab axis before calling this).
+    """
+    a, b, l, k = beta_w.shape
+    s = config.n_gibbs
+    uniforms, z0 = jax.vmap(
+        lambda kk: draw_gibbs_randoms(config, kk, b, l, beta_w.dtype))(keys)
+    per_pos, _z, _ndk = backend.sweeps(
+        beta_w.reshape(a * b, l, k),
+        maskf.reshape(a * b, l),
+        jnp.moveaxis(uniforms, 0, 1).reshape(s, a * b, l),
+        z0.reshape(a * b, l),
+        alpha=config.alpha, n_sweeps=s, burnin=config.n_gibbs_burnin,
+        rao_blackwell=rao_blackwell)
+    return per_pos.reshape(a, b, l, k)
+
+
 def estep_batch(backend: _EStepBase, config: LDAConfig, keys: jax.Array,
                 words: jax.Array, mask: jax.Array, beta: jax.Array,
                 rao_blackwell: bool = True) -> jax.Array:
@@ -276,24 +342,36 @@ def estep_batch(backend: _EStepBase, config: LDAConfig, keys: jax.Array,
     every sweep op is elementwise or a last-axis reduction, independent of
     which documents share the batch.
     """
-    a, b, l = words.shape
-    k = config.n_topics
-    s = config.n_gibbs
-
-    uniforms, z0 = jax.vmap(
-        lambda kk: draw_gibbs_randoms(config, kk, b, l, beta.dtype))(keys)
     beta_w = jax.vmap(lambda bt, w: jnp.take(bt.T, w, axis=0))(beta, words)
     maskf = mask.astype(beta.dtype)
-
-    per_pos, _z, _ndk = backend.sweeps(
-        beta_w.reshape(a * b, l, k),
-        maskf.reshape(a * b, l),
-        jnp.moveaxis(uniforms, 0, 1).reshape(s, a * b, l),
-        z0.reshape(a * b, l),
-        alpha=config.alpha, n_sweeps=s, burnin=config.n_gibbs_burnin,
-        rao_blackwell=rao_blackwell)
-
-    per_pos = per_pos.reshape(a, b, l, k)
+    per_pos = fused_sweeps(backend, config, keys, beta_w, maskf,
+                           rao_blackwell=rao_blackwell)
     return jax.vmap(
-        lambda w, p: stats_from_per_pos(w, p, config.vocab_size))(
-            words, per_pos)
+        lambda w, p, m: stats_from_per_pos(w, p, config.vocab_size, m))(
+            words, per_pos, maskf)
+
+
+def estep_batch_from_stats(backend: _EStepBase, config: LDAConfig,
+                           keys: jax.Array, words: jax.Array,
+                           mask: jax.Array, stats: jax.Array,
+                           rao_blackwell: bool = True) -> jax.Array:
+    """Fused E-steps reading the topic matrix DIRECTLY from the statistic.
+
+    The Scale layer's blocked-stats path: instead of materializing the
+    dense per-node ``eta_star(stats)`` output [A, K, V] (an O(A*K*V)
+    temporary that dominates at V >= 10k), gather only the minibatch's
+    ``beta[:, words]`` columns via :func:`beta_w_from_stats` — O(A*B*L*K)
+    gathered values plus an [A, K] fused row-sum reduction. Bitwise-equal
+    to ``estep_batch(..., beta=eta_star(stats, config.tau))``.
+
+    stats: [A, K, V] or vocab-sharded [A, K, S, V/S] per-node statistics.
+    Returns per-node statistics [A, K, V].
+    """
+    beta_w = jax.vmap(
+        lambda st, w: beta_w_from_stats(st, w, config.tau))(stats, words)
+    maskf = mask.astype(beta_w.dtype)
+    per_pos = fused_sweeps(backend, config, keys, beta_w, maskf,
+                           rao_blackwell=rao_blackwell)
+    return jax.vmap(
+        lambda w, p, m: stats_from_per_pos(w, p, config.vocab_size, m))(
+            words, per_pos, maskf)

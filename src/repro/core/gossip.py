@@ -99,8 +99,11 @@ def ring_matchings(n: int) -> np.ndarray:
         p_even[i], p_even[i + 1] = i + 1, i
     for i in range(1, n - 1, 2):
         p_odd[i], p_odd[i + 1] = i + 1, i
-    if n % 2 == 0 and n > 2:
-        # close the ring on the odd round: pair (n-1, 0)
+    if n % 2 == 0 and n >= 2:
+        # close the ring on the odd round: pair (n-1, 0). For n == 2 the
+        # "ring" is the single edge (0, 1), so the odd round repeats it —
+        # an identity odd round would silently waste half the round budget
+        # that decentralized.rounds_per_axis charges for ring schedules.
         p_odd[n - 1], p_odd[0] = 0, n - 1
     return np.stack([p_even, p_odd], axis=0)
 

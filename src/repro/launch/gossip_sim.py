@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.configs.lda_paper import CONFIG as PAPER
+from repro.core import comm as comm_mod
 from repro.core import gossip
 from repro.core.comm import GossipSchedule, MeshComm
 from repro.core.graph import complete_graph, watts_strogatz_graph
@@ -46,13 +47,25 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     batch_size: int, seed: int = 0, mesh=None,
                     schedule: GossipSchedule | None = None,
                     estep_backend: str = "dense",
-                    scenario=None, alive: np.ndarray | None = None):
+                    scenario=None, alive: np.ndarray | None = None,
+                    mesh_shape: tuple[int, int] | None = None):
     """words/mask [n, D, L] node-sharded over the mesh "data" axis.
 
     Returns (stats [n, K, V], consensus trace, wall seconds). The gossip
     path is pure MeshComm ppermute routing; the local-update step contains
-    no collectives at all — each device runs ONE fused E-step over all of
-    its local nodes' minibatches (`repro.core.estep.estep_batch`).
+    no node-axis collectives at all — each device runs ONE fused E-step
+    over all of its local nodes' minibatches
+    (`repro.core.estep.fused_sweeps`).
+
+    ``mesh_shape=(node_devices, vocab_devices)`` builds a 2-D node x vocab
+    execution grid (the Scale layer): statistics live sharded
+    [n, K, V/vocab_devices] per device, gossip ppermutes each vocab
+    shard's own block over the node axis (per-link payload drops by the
+    vocab-axis size), and the E-step assembles the minibatch's beta
+    columns with one O(B*L*K) psum over the vocab axis — the O(K*V) topic
+    matrix is never materialized nor gathered. Documents are replicated
+    over the vocab axis only (never across the node axis: the privacy
+    placement is unchanged).
 
     Dynamic-network regimes: pass a `repro.core.scenario.Scenario` (its
     compiled schedule + churn mask replace `schedule`/`alive`; `graph` may
@@ -62,9 +75,17 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
     (churned) nodes skip their local update and their step counter stays
     frozen, matching `run_deleda`'s semantics.
     """
+    if mesh_shape is not None:
+        if mesh is not None:
+            raise ValueError("pass mesh OR mesh_shape, not both")
+        if lda.vocab_size % mesh_shape[1]:
+            raise ValueError(f"vocab axis {mesh_shape[1]} must divide "
+                             f"vocab_size={lda.vocab_size}")
+        mesh = comm_mod.make_grid_mesh(*mesh_shape)
     mesh = mesh or make_host_mesh()
+    vocab_axis = "vocab" if mesh_shape is not None else None
     n = words.shape[0]
-    comm = MeshComm(mesh=mesh, axis_name="data")
+    comm = MeshComm(mesh=mesh, axis_name="data", vocab_axis=vocab_axis)
     assert n % comm.n_devices == 0, (n, comm.n_devices)
     if scenario is not None:
         if scenario.topology.n_nodes != n:
@@ -100,22 +121,26 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
     estep = estep_mod.get_estep(estep_backend)
 
     node = P("data")
+    stats_spec = P("data", None, vocab_axis) if vocab_axis else node
     sharding = NamedSharding(mesh, node)
     words = jax.device_put(words, sharding)
     mask = jax.device_put(mask, sharding)
 
     stats0 = jax.vmap(lambda k: init_stats(lda, k))(
         jax.random.split(jax.random.key(seed), n))
-    stats0 = jax.device_put(stats0, sharding)
+    stats0 = jax.device_put(stats0, NamedSharding(mesh, stats_spec))
 
     def update_fn(stats, steps, key, w, m, al):
-        # stats [n_local, K, V]; pure local G-OEM — NO collectives here,
-        # gossip already happened via MeshComm outside this jit. All of
-        # the device's nodes run as ONE fused [n_local*B, L] E-step call;
-        # al [n_local] bool masks out down (churned) nodes.
+        # stats [n_local, K, V_local]; pure local G-OEM — gossip already
+        # happened via MeshComm outside this jit, and the only collective
+        # here is the O(B*L*K) beta-column psum over the vocab axis of a
+        # 2-D grid. All of the device's nodes run as ONE fused
+        # [n_local*B, L] E-step call; al [n_local] masks down nodes.
         n_local = stats.shape[0]
         dev = jax.lax.axis_index("data")
-        key = jax.random.fold_in(key, dev)   # per-device stream (varying)
+        key = jax.random.fold_in(key, dev)   # per-device stream (varying
+                                             # over nodes, NOT over vocab
+                                             # shards of the same nodes)
         ks = jax.vmap(jax.random.split)(jax.random.split(key, n_local))
         k_sel, k_gibbs = ks[:, 0], ks[:, 1]  # [n_local] each
 
@@ -125,9 +150,39 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
             return node_words[idx], node_mask[idx]
 
         bw, bm = jax.vmap(select)(k_sel, w, m)          # [n_local, B, L]
-        beta = eta_star(stats, lda.tau)                 # [n_local, K, V]
-        stats_hat = estep_mod.estep_batch(estep, lda, k_gibbs, bw, bm,
-                                          beta)
+        maskf = bm.astype(stats.dtype)
+        if vocab_axis:
+            # -- blocked beta assembly across the vocab axis: each shard
+            # contributes (stats[:, w] + tau) for ITS words, one psum of
+            # the [n_local, B, L, K] partials builds the full likelihood
+            # rows — the dense [K, V] topic matrix never exists anywhere
+            v_local = stats.shape[-1]
+            v0 = jax.lax.axis_index(vocab_axis) * v_local
+            denom = jax.lax.psum((stats + lda.tau).sum(-1),
+                                 vocab_axis)            # [n_local, K]
+            lw = bw - v0                                # local word ids
+            in_shard = (lw >= 0) & (lw < v_local)
+            lw = jnp.clip(lw, 0, v_local - 1)
+            cols = jax.vmap(
+                lambda st, ww: jnp.moveaxis(st[:, ww], 0, -1))(stats, lw)
+            part = jnp.where(in_shard[..., None], cols + lda.tau, 0.0)
+            beta_w = jax.lax.psum(part, vocab_axis) / denom[:, None, None]
+            scatter_w, v_scatter = lw, v_local
+            per_pos_mask = in_shard
+        else:
+            beta_w = jax.vmap(
+                lambda st, ww: estep_mod.beta_w_from_stats(
+                    st, ww, lda.tau))(stats, bw)
+            scatter_w, v_scatter = bw, lda.vocab_size
+            per_pos_mask = None
+        per_pos = estep_mod.fused_sweeps(estep, lda, k_gibbs, beta_w,
+                                         maskf)         # [n_local,B,L,K]
+        if per_pos_mask is not None:
+            # each vocab shard scatters only ITS words' contributions
+            per_pos = jnp.where(per_pos_mask[..., None], per_pos, 0.0)
+        stats_hat = jax.vmap(
+            lambda ww, pp, mm: estep_mod.stats_from_per_pos(
+                ww, pp, v_scatter, mm))(scatter_w, per_pos, maskf)
         rho = rho_fn(steps + 1).astype(stats.dtype)[:, None, None]
         new_stats = (1 - rho) * stats + rho * stats_hat
         return (jnp.where(al[:, None, None], new_stats, stats),
@@ -135,8 +190,8 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
 
     shmap = compat.shard_map(
         update_fn, mesh=mesh,
-        in_specs=(node, node, P(), node, node, node),
-        out_specs=(node, node))
+        in_specs=(stats_spec, node, P(), node, node, node),
+        out_specs=(stats_spec, node))
     jitted = jax.jit(shmap, donate_argnums=(0,))
 
     alive_dev = jnp.asarray(alive)
@@ -172,7 +227,20 @@ def main(argv=None):
                     help="per-event gossip message drop probability")
     ap.add_argument("--churn", type=float, default=0.0,
                     help="stationary fraction of nodes down at any round")
+    ap.add_argument("--mesh-shape", default=None, metavar="NODES,VOCAB",
+                    help="2-D node x vocab device grid, e.g. 4,2 "
+                         "(needs NODES*VOCAB devices)")
     args = ap.parse_args(argv)
+    mesh_shape = None
+    if args.mesh_shape:
+        try:
+            mesh_shape = tuple(int(x) for x in args.mesh_shape.split(","))
+        except ValueError:
+            ap.error(f"--mesh-shape expects NODES,VOCAB integers, "
+                     f"got {args.mesh_shape!r}")
+        if len(mesh_shape) != 2:
+            ap.error(f"--mesh-shape expects exactly NODES,VOCAB, "
+                     f"got {args.mesh_shape!r}")
 
     lda = LDAConfig(n_topics=PAPER.lda.n_topics,
                     vocab_size=PAPER.lda.vocab_size,
@@ -197,7 +265,8 @@ def main(argv=None):
 
     stats, consensus, sec = run_mesh_deleda(
         lda, corpus.words, corpus.mask, graph, args.steps, args.batch,
-        args.seed, estep_backend=args.estep_backend, scenario=scenario)
+        args.seed, estep_backend=args.estep_backend, scenario=scenario,
+        mesh_shape=mesh_shape)
     d = float(beta_distance(eta_star(stats[0]), corpus.beta_star))
     print(f"{args.steps} steps in {sec:.1f}s | consensus {consensus} "
           f"| D(beta, beta*) node0 = {d:.4f}")

@@ -34,6 +34,9 @@ N, T = 8, 20
 
 COMBOS = [(c, e) for c in comm.SIM_BACKENDS for e in estep.ESTEP_BACKENDS]
 KINDS = ("edge", "matching")
+# Scale layer: vocab-sharded carry must ride the SAME trajectory
+SHARDED_COMBOS = [("dense", "dense"), ("pallas", "pallas")]
+SHARDS = 4
 
 
 def _fingerprint(trace: deleda.DeledaTrace) -> dict:
@@ -48,14 +51,16 @@ def _fingerprint(trace: deleda.DeledaTrace) -> dict:
     }
 
 
-def _run(comm_backend: str, estep_backend: str, kind: str):
+def _run(comm_backend: str, estep_backend: str, kind: str,
+         vocab_shards: int = 1):
     corpus = make_corpus(CFG, jax.random.key(0),
                          CorpusSpec(n_nodes=N, docs_per_node=4, n_test=4))
     g = watts_strogatz_graph(N, 4, 0.3, seed=0)
     sched, degs = deleda.make_run_inputs(g, T, seed=0, kind=kind)
     cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2,
                               comm_backend=comm_backend,
-                              estep_backend=estep_backend)
+                              estep_backend=estep_backend,
+                              vocab_shards=vocab_shards)
     return deleda.run_deleda(cfg, jax.random.key(1), corpus.words,
                              corpus.mask, sched, degs, T, record_every=10)
 
@@ -75,9 +80,34 @@ def regen_if_requested():
             for cb, eb in COMBOS:
                 payload[f"{kind}:{cb}:{eb}"] = _fingerprint(_run(cb, eb,
                                                                  kind))
+        for cb, eb in SHARDED_COMBOS:
+            payload[f"matching:{cb}:{eb}:vs{SHARDS}"] = _fingerprint(
+                _run(cb, eb, "matching", vocab_shards=SHARDS))
         with open(GOLDEN_PATH, "w") as f:
             json.dump(payload, f, indent=2)
     yield
+
+
+@pytest.mark.parametrize("cb,eb", SHARDED_COMBOS)
+def test_sharded_trace_matches_golden(cb, eb):
+    """The vocab-sharded carry rides the SAME pinned trajectory: its
+    fingerprint is regenerated like any other combo and must match both
+    its own entry and (to float tolerance) the dense combo's."""
+    key = f"matching:{cb}:{eb}:vs{SHARDS}"
+    golden = _golden()
+    if key not in golden:
+        pytest.skip(f"{key} not in goldens; refresh with GOLDEN_REGEN=1")
+    got = _fingerprint(_run(cb, eb, "matching", vocab_shards=SHARDS))
+    assert got["steps"] == golden[key]["steps"]
+    np.testing.assert_allclose(got["mass"], golden[key]["mass"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(got["probe"], golden[key]["probe"],
+                               rtol=3e-3, atol=1e-5)
+    dense = golden[f"matching:{cb}:{eb}"]
+    assert got["steps"] == dense["steps"]
+    np.testing.assert_allclose(got["mass"], dense["mass"], rtol=1e-4)
+    np.testing.assert_allclose(got["probe"], dense["probe"], rtol=3e-3,
+                               atol=1e-5)
 
 
 @pytest.mark.parametrize("kind", KINDS)
