@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import deleda
-from repro.core.evaluation import log_perplexity
+from repro.core.evaluation import EvalSpec, log_perplexity
 from repro.core.graph import complete_graph, watts_strogatz_graph
 from repro.core.lda import LDAConfig, beta_distance, eta_star
 from repro.core.oem import run_oem
@@ -75,6 +75,18 @@ def get_scale(name: str) -> ExperimentScale:
     return {"reduced": REDUCED, "paper": PAPER,
             "scenario_paper": SCENARIO_PAPER,
             "scenario_smoke": SCENARIO_SMOKE}[name]
+
+
+def make_eval_spec(scale: ExperimentScale, corpus, seed: int) -> EvalSpec:
+    """The in-loop held-out evaluation request for run_deleda.
+
+    Same key as make_beta_evaluator's post-hoc path, so in-loop and
+    post-hoc LPs are the SAME estimator stream (fold_in(key, doc_id) —
+    identical floats for identical stats)."""
+    return EvalSpec(words=corpus.test_words, mask=corpus.test_mask,
+                    key=jax.random.key(seed + 1),
+                    n_particles=scale.n_particles,
+                    probe_nodes=scale.probe_nodes)
 
 
 def make_beta_evaluator(scale: ExperimentScale, corpus, seed: int):
@@ -131,26 +143,34 @@ def run_experiment(scale: ExperimentScale, seed: int = 0,
         print(f"  goem: {time.time()-t0:.0f}s  rel={rel[-1]:+.4f} "
               f"D={dist[-1]:.4f}")
 
-    # ---- DELEDA variants
+    # ---- DELEDA variants (LP rides the training scan: the Evaluation
+    # layer records it on-device per record block instead of replaying
+    # `history` host-side; beta_distance still reads the history)
+    eval_spec = make_eval_spec(scale, corpus, seed)
     for gname, graph in graph_objs.items():
         results["lambda2"][gname] = graph.lambda2()
         for mode in modes:
             t0 = time.time()
             cfg = deleda.DeledaConfig(lda=scale.lda, mode=mode,
-                                      batch_size=scale.batch_size)
+                                      batch_size=scale.batch_size,
+                                      eval_every=scale.record_every)
             edges, degs = deleda.make_run_inputs(graph, scale.n_steps,
                                                  seed=seed)
             trace = deleda.run_deleda(cfg, jax.random.key(seed + 3),
                                       corpus.words, corpus.mask, edges,
                                       degs, scale.n_steps,
-                                      scale.record_every)
+                                      scale.record_every,
+                                      eval_spec=eval_spec)
             # per-checkpoint: average metric over probe nodes
-            rels, dists = [], []
+            lp_probe = np.asarray(trace.eval_lp)    # [R, probe_nodes]
+            rels = [float(v) for v in lp_probe.mean(axis=1) / lp_star - 1.0]
+            dists = []
             for r in range(trace.history.shape[0]):
-                vals = [eval_beta(trace.history[r, i])
-                        for i in range(scale.probe_nodes)]
-                rels.append(float(np.mean([v[0] for v in vals])))
-                dists.append(float(np.mean([v[1] for v in vals])))
+                vals = [beta_distance(
+                    eta_star(trace.history[r, i], scale.lda.tau),
+                    corpus.beta_star)
+                    for i in range(scale.probe_nodes)]
+                dists.append(float(np.mean([float(v) for v in vals])))
             results["runs"][f"{mode}_{gname}"] = {
                 "rel_perplexity": rels,
                 "beta_distance": dists,

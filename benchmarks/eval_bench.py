@@ -1,0 +1,225 @@
+"""Evaluation-layer benchmark: streaming/sharded held-out eval vs legacy.
+
+The left-to-right estimator used to be a post-hoc, dense-only path: it
+pre-drew a [B, L, P, L] uniform tensor (the O(L^2) memory term), required
+a dense [K, V] beta, and its per-document streams depended on batch
+layout. The Evaluation layer replaces it with in-scan uniform draws
+(O(B*P*L) live), fold_in(key, doc_id) chunk-invariant streams, and a
+blocked-stats beta path that consumes (vocab-sharded) statistics
+directly. This bench sweeps three variants
+
+    legacy    the old path, reimplemented here as the baseline: one
+              unchunked call, [B, L, P, L] pre-draw, dense [K, V] beta
+    stream    evaluate_heldout(beta=..., chunk_docs=C): in-scan draws,
+              dense beta input, C docs at a time
+    sharded   evaluate_heldout(stats=[K, S, V/S], chunk_docs=C): the
+              blocked beta_w_from_stats gather — no dense beta anywhere
+
+over two regimes
+
+    paper   K=5, V=100, B=100 test docs       (the fig1a shape)
+    mid     K=5, V=10k, n=512 node stats,     (the Scale-layer
+            B=10_000 test docs, S=8 shards     acceptance point)
+
+recording wall time and XLA-measured peak temp memory
+(``compiled.memory_analysis()``) per variant. The legacy variant is
+EXECUTED on a capped subset of documents (it cannot chunk — that is the
+point) but its full-B memory demand is still measured by compiling at
+full B without running. `stream` and `sharded` are asserted bitwise
+identical; `legacy` agrees in mean LP within MC error (its PRNG stream
+legitimately differs).
+
+Usage: PYTHONPATH=src python -m benchmarks.eval_bench [--regimes paper]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estep as estep_mod
+from repro.core.evaluation import evaluate_heldout
+from repro.core.lda import LDAConfig, eta_star, init_stats
+
+REGIMES = {
+    "paper": dict(n=50, v=100, k=5, b=100, l=32, p=10, chunk=25,
+                  shards=4, legacy_cap=100, iters=3),
+    "mid": dict(n=512, v=10_000, k=5, b=10_000, l=64, p=10, chunk=512,
+                shards=8, legacy_cap=512, iters=1),
+}
+
+
+# ----------------------------------------------------------------------------
+# The legacy estimator (pre-Evaluation-layer), kept verbatim as baseline
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_particles",))
+def legacy_left_to_right(key, words, mask, beta, alpha, n_particles=10):
+    """The old path: split(key, b) streams + [B, L, P, L] uniform pre-draw."""
+    b, l = words.shape
+    k_dim = beta.shape[0]
+    p = n_particles
+    beta_w = jnp.take(beta.T, words, axis=0)                  # [B, L, K]
+    maskf = mask.astype(beta.dtype)
+    alpha_sum = alpha * k_dim
+
+    keys = jax.random.split(key, b)
+    u_rs = jax.vmap(lambda kk: jax.random.uniform(kk, (l, p, l)))(keys)
+    u_dr = jax.vmap(lambda kk: jax.random.uniform(
+        jax.random.fold_in(kk, 1), (l, p)))(keys)
+
+    def position(carry, inp):
+        z, n_k = carry
+        n_idx, u_rs_n, u_dr_n = inp
+        pos_maskf = jnp.where(jnp.arange(l)[None, :] < n_idx, maskf, 0.0)
+
+        def resample(i, st):
+            z, n_k = st
+            new_z, n_k, _post = estep_mod.gibbs_position_update(
+                n_k, z[:, :, i], beta_w[:, None, i, :],
+                pos_maskf[:, i][:, None], u_rs_n[:, :, i], alpha)
+            z = z.at[:, :, i].set(new_z)
+            return z, n_k
+
+        z, n_k = jax.lax.fori_loop(0, l, resample, (z, n_k))
+        bw_n = beta_w[:, n_idx, :]
+        n_lt = n_k.sum(-1, keepdims=True)
+        theta_hat = (n_k + alpha) / (n_lt + alpha_sum)
+        p_w = (theta_hat * bw_n[:, None, :]).sum(-1)
+        log_p = jnp.log(jnp.maximum(p_w.mean(axis=1), 1e-30))
+        log_p = jnp.where(mask[:, n_idx], log_p, 0.0)
+        probs_n = (n_k + alpha) * bw_n[:, None, :]
+        z_n = estep_mod.sample_from_unnormalized(probs_n, u_dr_n)
+        add = maskf[:, n_idx][:, None, None]
+        n_k = n_k + add * jax.nn.one_hot(z_n, k_dim, dtype=n_k.dtype)
+        z = z.at[:, :, n_idx].set(
+            jnp.where(mask[:, n_idx][:, None], z_n, z[:, :, n_idx]))
+        return (z, n_k), log_p
+
+    z0 = jnp.zeros((b, p, l), jnp.int32)
+    nk0 = jnp.zeros((b, p, k_dim), beta.dtype)
+    (_, _), log_ps = jax.lax.scan(
+        position, (z0, nk0),
+        (jnp.arange(l), jnp.moveaxis(u_rs, 1, 0), jnp.moveaxis(u_dr, 1, 0)))
+    return log_ps.sum(axis=0)
+
+
+def _peak_temp_bytes(jitted, *args) -> int | None:
+    """XLA-measured peak temp memory of one compiled call (CPU/TPU)."""
+    try:
+        ma = jitted.lower(*args).compile().memory_analysis()
+        return int(ma.temp_size_in_bytes) if ma is not None else None
+    except Exception:
+        return None
+
+
+def _timeit(fn, iters):
+    out = fn()
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def bench_regime(name: str, rg: dict) -> dict:
+    k, v, s = rg["k"], rg["v"], rg["shards"]
+    b, l, p, c = rg["b"], rg["l"], rg["p"], rg["chunk"]
+    cfg = LDAConfig(n_topics=k, vocab_size=v, alpha=0.5, doc_len_max=l)
+    print(f"--- {name}: n={rg['n']} V={v} K={k} B={b} L={l} P={p} "
+          f"chunk={c} shards={s}")
+
+    # per-node statistics as a Scale-layer run would carry them; the
+    # evaluator consumes node 0's (vocab-sharded view is the same floats)
+    stats_nodes = jax.vmap(lambda kk: init_stats(cfg, kk))(
+        jax.random.split(jax.random.key(0), rg["n"]))
+    stats = stats_nodes[0]
+    stats_sharded = stats.reshape(k, s, v // s)
+    beta = eta_star(stats, cfg.tau)
+    words = jax.random.randint(jax.random.key(1), (b, l), 0, v)
+    mask = jax.random.uniform(jax.random.key(2), (b, l)) < 0.9
+    key = jax.random.key(3)
+
+    # ---- legacy: executed on a capped subset, memory compiled at full B
+    cap = min(b, rg["legacy_cap"])
+    t_leg, ll_leg = _timeit(
+        lambda: legacy_left_to_right(key, words[:cap], mask[:cap], beta,
+                                     cfg.alpha, p), rg["iters"])
+    legacy_peak_cap = _peak_temp_bytes(
+        legacy_left_to_right, key, words[:cap], mask[:cap], beta,
+        cfg.alpha, p)
+    legacy_peak_full = (legacy_peak_cap if cap == b else _peak_temp_bytes(
+        legacy_left_to_right, key, words, mask, beta, cfg.alpha, p))
+    print(f"    legacy  ({cap:>6d} docs) {t_leg:8.2f}s  "
+          f"peak-temp {legacy_peak_full or 0:>13,d} B at B={b} "
+          f"(u_rs alone {b*l*p*l*4:,d} B)")
+
+    # ---- streaming chunked, dense beta input
+    t_str, ll_str = _timeit(
+        lambda: evaluate_heldout(key, words, mask, beta=beta,
+                                 alpha=cfg.alpha, n_particles=p,
+                                 chunk_docs=c), rg["iters"])
+    # ---- sharded-stats: blocked gather, no dense [K, V] beta anywhere
+    t_shr, ll_shr = _timeit(
+        lambda: evaluate_heldout(key, words, mask, stats=stats_sharded,
+                                 tau=cfg.tau, alpha=cfg.alpha,
+                                 n_particles=p, chunk_docs=c), rg["iters"])
+    np.testing.assert_array_equal(np.asarray(ll_str), np.asarray(ll_shr))
+
+    from repro.core.evaluation import _chunk_ll_from_stats
+    chunk_peak = _peak_temp_bytes(
+        _chunk_ll_from_stats, key, jnp.arange(c), words[:c], mask[:c],
+        stats_sharded, cfg.tau, cfg.alpha, p)
+    print(f"    stream  ({b:>6d} docs) {t_str:8.2f}s")
+    print(f"    sharded ({b:>6d} docs) {t_shr:8.2f}s  "
+          f"peak-temp {chunk_peak or 0:>13,d} B per chunk")
+
+    # legacy's stream differs (that was the bug) — same target, so mean
+    # LP must agree within MC error on the shared subset
+    lp_new = float(-np.asarray(ll_shr)[:cap].mean())
+    lp_leg = float(-np.asarray(ll_leg).mean())
+    mc_tol = 8.0 / np.sqrt(cap) + 0.05
+    assert abs(lp_new - lp_leg) < mc_tol * max(1.0, abs(lp_leg)), (
+        lp_new, lp_leg)
+
+    return dict(
+        regime=name, n=rg["n"], v=v, k=k, b=b, l=l, p=p, chunk=c,
+        shards=s,
+        legacy_docs=cap, legacy_wall_s=round(t_leg, 3),
+        legacy_wall_per_doc_ms=round(t_leg / cap * 1e3, 3),
+        legacy_peak_temp_bytes=legacy_peak_full,
+        legacy_uniforms_bytes=b * l * p * l * 4,
+        stream_wall_s=round(t_str, 3),
+        sharded_wall_s=round(t_shr, 3),
+        sharded_wall_per_doc_ms=round(t_shr / b * 1e3, 3),
+        sharded_peak_temp_bytes_per_chunk=chunk_peak,
+        inscan_uniforms_bytes=c * p * l * 4,
+        dense_beta_bytes=k * v * 4,
+        lp_legacy=round(lp_leg, 4), lp_sharded=round(lp_new, 4),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regimes", nargs="*", default=sorted(REGIMES),
+                    choices=sorted(REGIMES))
+    ap.add_argument("-o", "--out", default="BENCH_eval.json")
+    args = ap.parse_args(argv)
+
+    rows = [bench_regime(name, REGIMES[name]) for name in args.regimes]
+    payload = dict(backend_platform=jax.default_backend(), rows=rows)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,15 @@ Claims validated (EXPERIMENTS.md):
   C2 the complete graph converges no slower than Watts-Strogatz;
   C3 async converges at least as fast as sync (sync over-updates locally).
 
+The DELEDA LP trajectories ride the training scan (the Evaluation
+layer: `DeledaConfig.eval_every` + `EvalSpec` in
+benchmarks/_deleda_experiment.py) — recorded on-device per record block
+from the carried statistics, not replayed from `trace.history`
+host-side. Runbook note: the estimator's per-document PRNG streams
+moved from `split(key, b)` to the chunk-invariant `fold_in(key,
+doc_id)` (PR 5), so absolute LP values shift within MC error vs older
+artifacts and the eval goldens were regenerated; C1-C3 are unaffected.
+
 Usage: PYTHONPATH=src python -m benchmarks.fig1a_perplexity [--scale paper]
 """
 

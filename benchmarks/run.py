@@ -79,6 +79,14 @@ def main(argv=None):
     sections.append("scale")
 
     print("=" * 72)
+    print("eval: streaming/sharded held-out evaluation vs legacy path")
+    print("=" * 72)
+    from benchmarks import eval_bench
+    eval_bench.main([] if args.scale == "paper"
+                    else ["--regimes", "paper"])
+    sections.append("eval")
+
+    print("=" * 72)
     print("gossip vs all-reduce collective bytes (model)")
     print("=" * 72)
     from benchmarks import gossip_collectives

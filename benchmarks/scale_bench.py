@@ -22,6 +22,11 @@ Both variants are asserted allclose at every regime before timing, the
 full sharded `run_deleda` is timed end-to-end per regime (the n>=512 /
 V>=10k acceptance criterion is that it completes on one host), and at
 paper scale the sharded run is asserted against the dense-oracle run.
+Every timed run carries an in-loop held-out evaluation (the Evaluation
+layer: `DeledaConfig.eval_every` + an `EvalSpec`) so sharded traces are
+evaluable end-to-end — LP is computed on-device from the vocab-sharded
+carry with no dense [K, V] beta temporary — and rows record the final
+probe-node LP.
 Rows also record the comm layer's modeled wire bytes per matching round
 (total unchanged under sharding; per-link payload drops by S).
 
@@ -40,6 +45,7 @@ import numpy as np
 
 from repro.core import comm as comm_mod
 from repro.core import deleda, estep as estep_mod
+from repro.core.evaluation import EvalSpec
 from repro.core.graph import watts_strogatz_graph
 from repro.core.lda import LDAConfig, eta_star, init_stats
 
@@ -93,7 +99,8 @@ def bench_estep_paths(cfg: LDAConfig, rg: dict) -> dict:
                 blocked_speedup=round(t_d / t_b, 3), max_abs_err=err)
 
 
-def _make_run_inputs(cfg: LDAConfig, rg: dict, docs_per_node: int = 8):
+def _make_run_inputs(cfg: LDAConfig, rg: dict, docs_per_node: int = 8,
+                     n_test: int = 8):
     n = rg["n"]
     words = jax.random.randint(jax.random.key(4),
                                (n, docs_per_node, rg["l"]), 0,
@@ -103,27 +110,37 @@ def _make_run_inputs(cfg: LDAConfig, rg: dict, docs_per_node: int = 8):
     graph = watts_strogatz_graph(n, 4, 0.3, seed=0)
     sched, degs = deleda.make_run_inputs(graph, rg["steps"], seed=0,
                                          kind="matching")
-    return words, mask, sched, degs
+    # in-loop held-out evaluation rides the same scan (Evaluation layer):
+    # LP straight from the (sharded) carried statistic, no [K, V] beta
+    test_w = jax.random.randint(jax.random.key(7), (n_test, rg["l"]), 0,
+                                cfg.vocab_size)
+    test_m = jax.random.uniform(jax.random.key(8), (n_test, rg["l"])) < 0.9
+    spec = EvalSpec(words=test_w, mask=test_m, key=jax.random.key(9),
+                    n_particles=2, probe_nodes=2)
+    return words, mask, sched, degs, spec
 
 
 def bench_run_deleda(cfg: LDAConfig, rg: dict, vocab_shards: int,
                      run_inputs) -> dict:
-    words, mask, sched, degs = run_inputs
+    words, mask, sched, degs, spec = run_inputs
     dcfg = deleda.DeledaConfig(lda=cfg, mode="sync", batch_size=rg["b"],
-                               vocab_shards=vocab_shards)
+                               vocab_shards=vocab_shards,
+                               eval_every=rg["steps"])
     t0 = time.time()
     trace = deleda.run_deleda(dcfg, jax.random.key(6), words, mask, sched,
                               degs, rg["steps"],
-                              record_every=rg["steps"])
+                              record_every=rg["steps"], eval_spec=spec)
     jax.block_until_ready(trace.stats)
     wall = time.time() - t0            # includes the one-off jit compile
     t_run, trace = _timeit(
         lambda: deleda.run_deleda(dcfg, jax.random.key(6), words, mask,
                                   sched, degs, rg["steps"],
-                                  record_every=rg["steps"]),
+                                  record_every=rg["steps"],
+                                  eval_spec=spec),
         iters=rg["iters"])
     return dict(total_s=t_run, s_per_step=t_run / rg["steps"],
-                first_call_s=wall, trace=trace)
+                first_call_s=wall, trace=trace,
+                eval_lp=float(np.asarray(trace.eval_lp)[-1].mean()))
 
 
 def wire_bytes(rg: dict, sched_row: np.ndarray, itemsize: int = 4) -> dict:
@@ -165,7 +182,8 @@ def main(argv=None):
         print(f"    run_deleda[sharded x{rg['shards']}] "
               f"{run_sharded['s_per_step']*1e3:9.1f} ms/step "
               f"({rg['steps']} steps, first call "
-              f"{run_sharded['first_call_s']:.1f}s)")
+              f"{run_sharded['first_call_s']:.1f}s, in-loop held-out "
+              f"LP {run_sharded['eval_lp']:.3f})")
 
         allclose_dense = None
         if name == "paper":
@@ -186,6 +204,7 @@ def main(argv=None):
             estep_blocked_s=round(ep["blocked_s"], 4),
             estep_blocked_speedup=ep["blocked_speedup"],
             run_s_per_step=round(run_sharded["s_per_step"], 4),
+            inloop_eval_lp=round(run_sharded["eval_lp"], 4),
             sharded_vs_dense_max_err=allclose_dense, **wb))
 
     payload = dict(backend_platform=jax.default_backend(), rows=rows)

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core import comm as comm_mod
 from repro.core import estep as estep_mod
+from repro.core import evaluation as eval_mod
 from repro.core import gossip
 from repro.core.graph import Graph
 from repro.core.lda import LDAConfig, init_stats
@@ -80,10 +81,17 @@ class DeledaConfig:
     comm_backend: str = "dense"      # gossip mixing: "dense" | "pallas"
     estep_backend: str = "dense"     # local E-steps: "dense" | "pallas"
     vocab_shards: int = 1            # Scale layer: split V into S blocks
+    eval_every: int = 0              # Evaluation layer: in-loop held-out
+                                     # LP every this many steps (0 = off;
+                                     # needs an EvalSpec, must be a
+                                     # multiple of record_every)
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {self.mode!r}")
+        if self.eval_every < 0:
+            raise ValueError(f"eval_every must be >= 0, "
+                             f"got {self.eval_every}")
         if self.vocab_shards < 1:
             raise ValueError(f"vocab_shards must be >= 1, "
                              f"got {self.vocab_shards}")
@@ -115,6 +123,8 @@ class DeledaTrace(NamedTuple):
     steps: jax.Array          # [n] int32 per-node local-update counters
     history: jax.Array        # [R, n, K, V] recorded stats snapshots
     consensus: jax.Array      # [R] ||S - mean||_F at each record point
+    eval_lp: jax.Array | None = None   # [E, probe_nodes] in-loop held-out
+                                       # LP (config.eval_every > 0 only)
 
 
 def _resolve_schedule_kind(schedule: jax.Array, n: int, kind: str) -> str:
@@ -145,7 +155,8 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
                mask: jax.Array, schedule: jax.Array, degrees: jax.Array,
                n_steps: int, record_every: int = 10,
                schedule_kind: str = "auto",
-               alive: jax.Array | None = None) -> DeledaTrace:
+               alive: jax.Array | None = None,
+               eval_spec: eval_mod.EvalSpec | None = None) -> DeledaTrace:
     """Run DELEDA for `n_steps` gossip iterations.
 
     words: [n, D, L] int32 private documents per node; mask: [n, D, L] bool;
@@ -170,9 +181,29 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     reduce may re-associate across shards; mixing, gathers, scatters and
     blends are elementwise or identical-order) and the returned trace is
     always densely shaped.
+
+    ``config.eval_every = E`` (the Evaluation layer) rides the same scan:
+    at every E-th step the held-out LP of the first
+    ``eval_spec.probe_nodes`` nodes is computed ON-DEVICE straight from
+    the (possibly vocab-sharded) carried statistic — the blocked
+    ``beta_w_from_stats`` gather, no dense [K, V] beta temporary — and
+    recorded in ``trace.eval_lp`` [n_steps/E, probe_nodes]. The training
+    trajectory is unchanged (the evaluator has its own ``eval_spec.key``
+    stream), asserted against the pinned goldens.
     """
     if n_steps % record_every != 0:
         raise ValueError("n_steps must be divisible by record_every")
+    if config.eval_every:
+        if eval_spec is None:
+            raise ValueError("config.eval_every > 0 needs an eval_spec "
+                             "(repro.core.evaluation.EvalSpec)")
+        if config.eval_every % record_every != 0:
+            raise ValueError(
+                f"eval_every={config.eval_every} must be a multiple of "
+                f"record_every={record_every}")
+        if n_steps % config.eval_every != 0:
+            raise ValueError(f"n_steps={n_steps} must be divisible by "
+                             f"eval_every={config.eval_every}")
     n, d, l = words.shape
     kind = _resolve_schedule_kind(schedule, n, schedule_kind)
     comm = comm_mod.get_communicator(config.comm_backend)
@@ -322,16 +353,43 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
                                     schedule.shape[-1])
     alive_blocks = alive_t.reshape(n_rec, record_every, n)
     corr_blocks = corr_t.reshape(n_rec, record_every, n)
-    (stats, steps), (history, consensus) = jax.lax.scan(
-        record_block, (stats0, steps0),
-        (event_blocks, keys, alive_blocks, corr_blocks))
+    xs = (event_blocks, keys, alive_blocks, corr_blocks)
+    if config.eval_every:
+        # Evaluation layer: nest the record blocks inside eval blocks so
+        # the LP trajectory is recorded on-device by the SAME scan. The
+        # probe nodes' (possibly vocab-sharded) statistic rows feed the
+        # blocked beta gather directly.
+        spec = eval_spec
+        probe = min(spec.probe_nodes, n)
+        blocks_per_eval = config.eval_every // record_every
+        n_eval = n_steps // config.eval_every
+
+        def eval_block(carry, inp):
+            carry, (hist, cons) = jax.lax.scan(record_block, carry, inp)
+            stats, _steps = carry
+            lp = jax.vmap(lambda st: eval_mod.heldout_lp_from_stats(
+                spec.key, spec.words, spec.mask, st, config.lda.tau,
+                config.lda.alpha, spec.n_particles))(stats[:probe])
+            return carry, (hist, cons, lp)
+
+        xs = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_eval, blocks_per_eval) + x.shape[1:]),
+            xs)
+        (stats, steps), (history, consensus, eval_lp) = jax.lax.scan(
+            eval_block, (stats0, steps0), xs)
+        history = history.reshape((n_rec,) + history.shape[2:])
+        consensus = consensus.reshape(n_rec)
+    else:
+        eval_lp = None
+        (stats, steps), (history, consensus) = jax.lax.scan(
+            record_block, (stats0, steps0), xs)
     if shards > 1:
         # externally the trace is always dense [.., K, V]; the shard axis
         # was contiguous layout only, so this reshape is free
         stats = stats.reshape(n, n_topics, vocab)
         history = history.reshape(n_rec, n, n_topics, vocab)
     return DeledaTrace(stats=stats, steps=steps, history=history,
-                       consensus=consensus)
+                       consensus=consensus, eval_lp=eval_lp)
 
 
 def make_run_inputs(graph: Graph, n_steps: int, seed: int = 0,
@@ -365,9 +423,13 @@ def consensus_report(trace: DeledaTrace, graph: Graph,
                                t0=config.rho_t0)
     rhos = np.asarray(jax.vmap(rho_fn)(jnp.arange(1, n_steps + 1)))
     # ||G|| bound: stats rows are per-document normalized counts; a crude
-    # but valid bound is the max recorded update magnitude.
+    # but valid bound is the max recorded iterate magnitude over ALL
+    # snapshots — taking only history[0] makes the envelope spuriously
+    # tight whenever the early iterates are small and the statistics
+    # still grow, falsely reporting envelope violations.
+    hist = np.asarray(trace.history, np.float64)            # [R, n, K, V]
     g_norm = float(np.linalg.norm(
-        np.asarray(trace.history[0]).reshape(trace.history.shape[1], -1),
+        hist.reshape(hist.shape[0], hist.shape[1], -1),
         axis=-1).max() + 1.0)
     env = gossip.consensus_envelope(lam2, rhos, g_norm)[record_every - 1::record_every]
     measured = np.asarray(trace.consensus)

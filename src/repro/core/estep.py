@@ -46,7 +46,8 @@ from repro.core.lda import LDAConfig
 __all__ = [
     "GibbsResult", "sample_from_unnormalized", "gibbs_position_update",
     "gibbs_sweeps_dense", "draw_gibbs_randoms", "stats_from_per_pos",
-    "beta_w_from_stats", "DenseEStep", "PallasEStep", "get_estep",
+    "count_nonempty", "beta_w_from_stats", "DenseEStep", "PallasEStep",
+    "get_estep",
     "ESTEP_BACKENDS", "fused_sweeps", "estep_batch",
     "estep_batch_from_stats",
 ]
@@ -157,6 +158,19 @@ def draw_gibbs_randoms(config: LDAConfig, key: jax.Array, b: int, l: int,
     return uniforms, z0
 
 
+def count_nonempty(mask: jax.Array) -> jax.Array:
+    """Number of documents with >= 1 unmasked position, guarded vs zero.
+
+    mask: [..., B, L] bool or float document mask. The shared denominator
+    rule for per-document means: padded all-masked documents contribute
+    nothing to a masked sum, so dividing by the full batch size would
+    silently bias the mean low. Used by :func:`stats_from_per_pos` and by
+    the evaluation layer's held-out LP mean.
+    """
+    n_nonempty = (mask.astype(jnp.float32).sum(-1) > 0).sum()
+    return jnp.maximum(n_nonempty, 1)
+
+
 def stats_from_per_pos(words: jax.Array, per_pos: jax.Array,
                        vocab_size: int,
                        maskf: jax.Array | None = None) -> jax.Array:
@@ -177,8 +191,7 @@ def stats_from_per_pos(words: jax.Array, per_pos: jax.Array,
     if maskf is None:
         denom = jnp.asarray(b, per_pos.dtype)
     else:
-        n_nonempty = (maskf.sum(-1) > 0).sum()
-        denom = jnp.maximum(n_nonempty, 1).astype(per_pos.dtype)
+        denom = count_nonempty(maskf).astype(per_pos.dtype)
     return stats.at[:, flat_w].add(flat_p.T) / denom
 
 

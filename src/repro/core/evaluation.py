@@ -1,4 +1,4 @@
-"""Evaluation for LDA: held-out log-perplexity via the left-to-right estimator.
+"""Evaluation layer: streaming, chunk-invariant held-out log-perplexity.
 
 Wallach et al. (2009), "Evaluation Methods for Topic Models", algorithm 3:
 for a test document w_{1:N} and model (beta, alpha),
@@ -13,17 +13,46 @@ resampled from their conditional before each new position is scored:
 
 The inner resample is the same masked categorical move as the training
 E-step and runs on the shared sweep core (`repro.core.estep`), vectorized
-over particles; all documents are batched through ONE scan over positions
-(instead of a vmap of per-document scans), so the O(L^2) resample loop —
-the fig1a wall-time hot spot — is a single [B, P]-wide program.
+over particles; all documents are batched through ONE scan over positions.
+
+This module is the fourth first-class layer next to comm/estep/scenario
+(DESIGN.md section 8). Three properties define it:
+
+* **chunk-invariant streams** — every document's PRNG stream is derived by
+  ``fold_in(key, doc_id)`` and, inside the position scan, by
+  ``fold_in(doc_key, position)``. A document's log-likelihood estimate is
+  therefore *bitwise* independent of which documents share its batch and
+  of the ``chunk_docs`` chunking of :func:`evaluate_heldout` — evaluating
+  a doc alone, in a batch, or across a chunk boundary gives identical
+  floats (tests/test_evaluation.py).
+
+* **O(B*P*L) memory** — each position's resample uniforms are drawn
+  *inside* the position scan from the position-folded key, so the old
+  ``[B, L, P, L]`` pre-drawn uniform tensor (the O(L^2) memory term that
+  made 10k-doc held-out sets impossible) never exists; the live state is
+  the [B, P, L] assignments + [B, P, K] counts.
+
+* **blocked-stats beta** — :func:`evaluate_heldout` and
+  :func:`heldout_lp_from_stats` consume sufficient statistics directly
+  (dense ``[K, V]`` or vocab-sharded ``[K, S, V/S]``) through
+  ``estep.beta_w_from_stats``: only the O(B*L*K) beta columns the test
+  words hit are gathered, bitwise-equal to materializing
+  ``eta_star(stats)`` first — so Scale-layer runs are evaluable without
+  un-sharding and without the dense topic-matrix temporary.
+
+In-loop evaluation: :class:`EvalSpec` + ``DeledaConfig.eval_every`` thread
+a held-out set through ``run_deleda`` / ``run_mesh_deleda`` so the LP
+trajectory is recorded on-device as the training scan runs (no host-side
+replay of ``trace.history``).
 
 The paper reports the *relative* log-perplexity error LP/LP* - 1 where
-LP = -log p(X | eta) averaged over test documents and LP* uses the
-generating parameters eta*.
+LP = -log p(X | eta) averaged over (non-empty) test documents and LP*
+uses the generating parameters eta*.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -31,30 +60,74 @@ import jax.numpy as jnp
 
 from repro.core import estep as estep_mod
 
+__all__ = [
+    "EvalSpec", "left_to_right_from_beta_w", "left_to_right_log_likelihood",
+    "evaluate_heldout", "heldout_lp_from_stats", "log_perplexity",
+    "log_perplexity_from_stats", "relative_perplexity_error",
+]
 
-@partial(jax.jit, static_argnames=("n_particles",))
-def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
-                                 mask: jax.Array, beta: jax.Array,
-                                 alpha: float,
-                                 n_particles: int = 10) -> jax.Array:
-    """[B] per-document log-likelihood estimates. words/mask: [B, L]."""
-    b, l = words.shape
-    k_dim = beta.shape[0]
+
+@dataclasses.dataclass(frozen=True)
+class EvalSpec:
+    """A held-out evaluation request threaded through the training scan.
+
+    ``words``/``mask`` are the [B, L] held-out documents, ``key`` the
+    estimator's PRNG key (fixed across checkpoints so the LP trajectory is
+    comparable point-to-point). ``n_particles`` and ``probe_nodes`` (how
+    many leading nodes' statistics to evaluate at each checkpoint) are
+    static pytree metadata.
+    """
+
+    words: jax.Array
+    mask: jax.Array
+    key: jax.Array
+    n_particles: int = 10
+    probe_nodes: int = 3
+
+
+jax.tree_util.register_dataclass(
+    EvalSpec, data_fields=["words", "mask", "key"],
+    meta_fields=["n_particles", "probe_nodes"])
+
+
+def _doc_keys(key: jax.Array, doc_ids: jax.Array) -> jax.Array:
+    """Per-document streams: fold_in keeps them independent of batching."""
+    return jax.vmap(lambda d: jax.random.fold_in(key, d))(doc_ids)
+
+
+def left_to_right_from_beta_w(key: jax.Array, doc_ids: jax.Array,
+                              beta_w: jax.Array, mask: jax.Array,
+                              alpha: float,
+                              n_particles: int = 10) -> jax.Array:
+    """[B] per-document LL estimates from pre-gathered likelihood rows.
+
+    beta_w [B, L, K] are the rows beta[:, w] for each position (gathered
+    from a dense beta or straight from a — possibly vocab-sharded —
+    statistic via ``estep.beta_w_from_stats``); mask [B, L] bool;
+    doc_ids [B] int32 stable document identities for the PRNG streams.
+
+    Every per-document stream is ``fold_in(key, doc_id)`` and each scan
+    step draws its own uniforms from ``fold_in(doc_key, position)``, so
+    the result for a given document is bitwise-invariant to batch
+    composition and the [B, L, P, L] pre-draw of the legacy path never
+    materializes.
+    """
+    b, l, k_dim = beta_w.shape
     p = n_particles
-    beta_w = jnp.take(beta.T, words, axis=0)                  # [B, L, K]
-    maskf = mask.astype(beta.dtype)
+    maskf = mask.astype(beta_w.dtype)
     alpha_sum = alpha * k_dim
+    keys_d = _doc_keys(key, doc_ids)                          # [B]
 
-    # Per-document streams (fold_in keeps them independent of batching).
-    keys = jax.random.split(key, b)
-    u_rs = jax.vmap(lambda kk: jax.random.uniform(kk, (l, p, l)))(keys)
-    u_dr = jax.vmap(lambda kk: jax.random.uniform(
-        jax.random.fold_in(kk, 1), (l, p)))(keys)
-
-    def position(carry, inp):
+    def position(carry, n_idx):
         # carry: (z [B, P, L] int32 assignments so far, n_k [B, P, K])
         z, n_k = carry
-        n_idx, u_rs_n, u_dr_n = inp         # [B, P, L], [B, P]
+        # this position's uniforms, drawn in-scan: O(B*P*L) live, keyed by
+        # (doc_id, position) only — never by batch layout or chunk index
+        def draws(kd):
+            k_rs, k_dr = jax.random.split(jax.random.fold_in(kd, n_idx))
+            return (jax.random.uniform(k_rs, (p, l)),
+                    jax.random.uniform(k_dr, (p,)))
+        u_rs_n, u_dr_n = jax.vmap(draws)(keys_d)    # [B, P, L], [B, P]
         # positions < n, still masked by the document mask
         pos_maskf = jnp.where(jnp.arange(l)[None, :] < n_idx, maskf, 0.0)
 
@@ -88,20 +161,141 @@ def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
         return (z, n_k), log_p
 
     z0 = jnp.zeros((b, p, l), jnp.int32)
-    nk0 = jnp.zeros((b, p, k_dim), beta.dtype)
-    (_, _), log_ps = jax.lax.scan(
-        position, (z0, nk0),
-        (jnp.arange(l), jnp.moveaxis(u_rs, 1, 0), jnp.moveaxis(u_dr, 1, 0)))
+    nk0 = jnp.zeros((b, p, k_dim), beta_w.dtype)
+    (_, _), log_ps = jax.lax.scan(position, (z0, nk0), jnp.arange(l))
     return log_ps.sum(axis=0)                                  # [B]
+
+
+@partial(jax.jit, static_argnames=("n_particles",))
+def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
+                                 mask: jax.Array, beta: jax.Array,
+                                 alpha: float,
+                                 n_particles: int = 10,
+                                 doc_ids: jax.Array | None = None
+                                 ) -> jax.Array:
+    """[B] per-document log-likelihood estimates. words/mask: [B, L].
+
+    ``doc_ids`` (default ``arange(B)``) are the identities fed to the
+    per-document ``fold_in`` streams; pass global ids when evaluating a
+    slice of a larger set so the estimates match the full-batch run
+    bitwise (:func:`evaluate_heldout` does this for its chunks).
+    """
+    b, _l = words.shape
+    if doc_ids is None:
+        doc_ids = jnp.arange(b, dtype=jnp.int32)
+    beta_w = jnp.take(beta.T, words, axis=0)                  # [B, L, K]
+    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
+                                     n_particles)
+
+
+@partial(jax.jit, static_argnames=("n_particles",))
+def _chunk_ll_from_stats(key, doc_ids, words, mask, stats, tau, alpha,
+                         n_particles):
+    beta_w = estep_mod.beta_w_from_stats(stats, words, tau)
+    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
+                                     n_particles)
+
+
+@partial(jax.jit, static_argnames=("n_particles",))
+def _chunk_ll_from_beta(key, doc_ids, words, mask, beta, alpha,
+                        n_particles):
+    beta_w = jnp.take(beta.T, words, axis=0)
+    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
+                                     n_particles)
+
+
+def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
+                     beta: jax.Array | None = None,
+                     stats: jax.Array | None = None, tau: float = 1e-2,
+                     alpha: float, n_particles: int = 10,
+                     chunk_docs: int | None = None) -> jax.Array:
+    """Streaming per-document held-out log-likelihoods, [B].
+
+    Pass exactly one of ``beta=`` (dense [K, V] topic matrix) or
+    ``stats=`` (sufficient statistics, dense [K, V] or vocab-sharded
+    [K, S, V/S] — the blocked ``estep.beta_w_from_stats`` gather is used,
+    so no dense beta is ever materialized and Scale-layer runs evaluate
+    without un-sharding).
+
+    ``chunk_docs=C`` scans the documents C at a time (one jit
+    compilation, C-shaped), so 10k+-doc held-out sets stream through one
+    host; per-document streams are keyed by the GLOBAL doc index, so the
+    result is bitwise-identical for every chunking (including C=B and
+    C=1). The last chunk is padded with empty (fully masked) documents,
+    which contribute log p = 0 and are sliced off.
+    """
+    if (beta is None) == (stats is None):
+        raise ValueError("pass exactly ONE of beta= or stats=")
+    b, l = words.shape
+    c = b if chunk_docs is None else max(1, min(int(chunk_docs), b))
+    n_chunks = -(-b // c)
+    if n_chunks * c > b:
+        pad = n_chunks * c - b
+        words = jnp.concatenate(
+            [words, jnp.zeros((pad, l), words.dtype)])
+        mask = jnp.concatenate([mask, jnp.zeros((pad, l), bool)])
+    doc_ids = jnp.arange(n_chunks * c, dtype=jnp.int32)
+    lls = []
+    for ci in range(n_chunks):
+        sl = slice(ci * c, (ci + 1) * c)
+        if stats is not None:
+            lls.append(_chunk_ll_from_stats(
+                key, doc_ids[sl], words[sl], mask[sl], stats, tau, alpha,
+                n_particles))
+        else:
+            lls.append(_chunk_ll_from_beta(
+                key, doc_ids[sl], words[sl], mask[sl], beta, alpha,
+                n_particles))
+    return jnp.concatenate(lls)[:b]
+
+
+def _lp_mean(ll: jax.Array, mask: jax.Array) -> jax.Array:
+    """LP = -mean log-likelihood over NON-EMPTY documents.
+
+    An all-masked (padded) document contributes log p = 0, so including
+    it in the mean silently deflates LP — same non-empty-count rule as
+    ``estep.stats_from_per_pos``.
+    """
+    return -ll.sum() / estep_mod.count_nonempty(mask).astype(ll.dtype)
+
+
+def heldout_lp_from_stats(key: jax.Array, words: jax.Array,
+                          mask: jax.Array, stats: jax.Array, tau: float,
+                          alpha: float, n_particles: int = 10) -> jax.Array:
+    """Scalar LP straight from a (possibly vocab-sharded) statistic.
+
+    Pure traced function — this is the in-loop evaluator that rides
+    ``run_deleda``'s training scan (vmapped over probe nodes) and the
+    per-chunk body of :func:`log_perplexity_from_stats`. Consumes stats
+    [K, V] or [K, S, V/S] through the blocked beta gather.
+    """
+    doc_ids = jnp.arange(words.shape[0], dtype=jnp.int32)
+    beta_w = estep_mod.beta_w_from_stats(stats, words, tau)
+    ll = left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
+                                   n_particles)
+    return _lp_mean(ll, mask)
 
 
 def log_perplexity(key: jax.Array, words: jax.Array, mask: jax.Array,
                    beta: jax.Array, alpha: float,
                    n_particles: int = 10) -> jax.Array:
-    """Average held-out log-perplexity LP = -mean_d log p(X_d | eta)."""
+    """Average held-out log-perplexity LP = -mean_d log p(X_d | eta),
+    the mean taken over non-empty documents only."""
     ll = left_to_right_log_likelihood(key, words, mask, beta, alpha,
                                       n_particles)
-    return -ll.mean()
+    return _lp_mean(ll, mask)
+
+
+def log_perplexity_from_stats(key: jax.Array, words: jax.Array,
+                              mask: jax.Array, stats: jax.Array, *,
+                              tau: float = 1e-2, alpha: float,
+                              n_particles: int = 10,
+                              chunk_docs: int | None = None) -> jax.Array:
+    """Scalar LP via the streaming evaluator (chunked, blocked-stats)."""
+    ll = evaluate_heldout(key, words, mask, stats=stats, tau=tau,
+                          alpha=alpha, n_particles=n_particles,
+                          chunk_docs=chunk_docs)
+    return _lp_mean(ll, mask)
 
 
 def relative_perplexity_error(lp: jax.Array, lp_star: jax.Array) -> jax.Array:

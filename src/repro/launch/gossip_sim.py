@@ -33,6 +33,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.configs.lda_paper import CONFIG as PAPER
 from repro.core import comm as comm_mod
+from repro.core import evaluation
 from repro.core import gossip
 from repro.core.comm import GossipSchedule, MeshComm
 from repro.core.graph import complete_graph, watts_strogatz_graph
@@ -48,10 +49,17 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     schedule: GossipSchedule | None = None,
                     estep_backend: str = "dense",
                     scenario=None, alive: np.ndarray | None = None,
-                    mesh_shape: tuple[int, int] | None = None):
+                    mesh_shape: tuple[int, int] | None = None,
+                    eval_every: int = 0,
+                    eval_spec: evaluation.EvalSpec | None = None):
     """words/mask [n, D, L] node-sharded over the mesh "data" axis.
 
-    Returns (stats [n, K, V], consensus trace, wall seconds). The gossip
+    Returns (stats [n, K, V], consensus trace, wall seconds) — plus, when
+    ``eval_every > 0``, a fourth element: the in-loop held-out LP
+    trajectory [n_steps/eval_every, probe_nodes] evaluated every
+    ``eval_every`` steps from the first ``eval_spec.probe_nodes`` nodes'
+    statistics via the Evaluation layer's blocked-stats path (no dense
+    [K, V] beta temporary, chunk-invariant fold_in(key, doc_id) streams). The gossip
     path is pure MeshComm ppermute routing; the local-update step contains
     no node-axis collectives at all — each device runs ONE fused E-step
     over all of its local nodes' minibatches
@@ -194,10 +202,27 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         out_specs=(stats_spec, node))
     jitted = jax.jit(shmap, donate_argnums=(0,))
 
+    eval_fn = None
+    if eval_every:
+        if eval_spec is None:
+            raise ValueError("eval_every > 0 needs an eval_spec "
+                             "(repro.core.evaluation.EvalSpec)")
+        if n_steps % eval_every != 0:
+            raise ValueError(
+                f"n_steps={n_steps} must be divisible by "
+                f"eval_every={eval_every} (the LP trajectory is "
+                f"[n_steps/eval_every, probe_nodes])")
+        probe = min(eval_spec.probe_nodes, n)
+        eval_fn = jax.jit(jax.vmap(
+            lambda st: evaluation.heldout_lp_from_stats(
+                eval_spec.key, eval_spec.words, eval_spec.mask, st,
+                lda.tau, lda.alpha, eval_spec.n_particles)))
+
     alive_dev = jnp.asarray(alive)
     stats = stats0
     steps = jnp.zeros((n,), jnp.int32)
     consensus = []
+    eval_lp = []
     t0 = time.time()
     for t in range(n_steps):
         # ---- gossip: one matching round, MeshComm ppermute routing
@@ -209,6 +234,10 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                               jax.device_put(alive_dev[t], sharding))
         if t % 10 == 0 or t == n_steps - 1:
             consensus.append(float(gossip.consensus_distance(stats)))
+        if eval_fn is not None and (t + 1) % eval_every == 0:
+            eval_lp.append(np.asarray(eval_fn(stats[:probe])))
+    if eval_fn is not None:
+        return stats, consensus, time.time() - t0, np.asarray(eval_lp)
     return stats, consensus, time.time() - t0
 
 

@@ -75,6 +75,37 @@ def test_consensus_trend(corpus, graph):
     assert rep["measured"].shape == rep["envelope"].shape
 
 
+def test_consensus_report_gnorm_covers_all_snapshots(graph):
+    """Regression: the ||G|| bound used ONLY history[0]. When the early
+    iterates are small and the statistics still grow, that envelope is
+    spuriously tight and falsely reports violations — the bound must take
+    the max over ALL recorded snapshots."""
+    n_steps, record_every, n = 20, 10, graph.n_nodes
+    k, v = CFG.n_topics, CFG.vocab_size
+    # snapshot 0 tiny (norm ~0 -> old bound = 1.0), snapshot 1 large
+    hist = np.zeros((2, n, k, v), np.float32)
+    hist[1] = 9.0 / np.sqrt(k * v)            # per-node flat norm = 9
+    cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=4)
+    from repro.core.oem import make_rho_schedule
+    rho_fn = make_rho_schedule(cfg.rho_kind, kappa=cfg.rho_kappa,
+                               t0=cfg.rho_t0)
+    rhos = np.asarray(jax.vmap(rho_fn)(jnp.arange(1, n_steps + 1)))
+    lam2 = graph.lambda2()
+    env_old = gossip.consensus_envelope(
+        lam2, rhos, 1.0)[record_every - 1::record_every]    # history[0] bound
+    env_new = gossip.consensus_envelope(
+        lam2, rhos, 10.0)[record_every - 1::record_every]   # all-snapshot
+    measured = 0.9 * env_new                  # inside the TRUE envelope
+    trace = deleda.DeledaTrace(
+        stats=jnp.asarray(hist[1]), steps=jnp.zeros((n,), jnp.int32),
+        history=jnp.asarray(hist), consensus=jnp.asarray(measured))
+    # the old history[0]-only bound falsely flags these as violations
+    assert float((measured <= env_old + 1e-6).mean()) < 1.0
+    rep = deleda.consensus_report(trace, graph, cfg, n_steps, record_every)
+    np.testing.assert_allclose(rep["envelope"], env_new, rtol=1e-6)
+    assert rep["within_envelope_frac"] == 1.0
+
+
 def test_mean_iterate_matches_oem_structure(corpus, graph):
     """DELEDA's network-average follows a G-OEM-like trajectory: it stays
     a convex combination of per-document statistics (mass bound) and moves

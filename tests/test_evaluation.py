@@ -1,10 +1,18 @@
-"""Left-to-right perplexity estimator: sanity + statistical ground truth.
+"""Evaluation layer: streaming estimator, chunk invariance, ground truth.
 
 The statistical half validates the two sampling primitives against exact
 targets: `estep.sample_from_unnormalized` against its categorical
 distribution (chi-square), and `left_to_right_log_likelihood` against
 brute-force enumeration of p(w | beta, alpha) on a tiny LDA (K=2, V=3,
 L=3) within Monte-Carlo error.
+
+The layer half asserts the Evaluation-layer contracts: per-document
+PRNG streams are fold_in(key, doc_id) (bitwise chunk/batch invariance —
+the old split(key, b) stream silently changed a document's estimate with
+batch layout), the blocked-stats beta path is bitwise-equal to the dense
+one (vocab-sharded included), empty padded documents are excluded from
+the LP mean, and the in-loop evaluator riding run_deleda's scan matches
+the post-hoc streaming evaluator.
 """
 
 import itertools
@@ -16,11 +24,15 @@ import numpy as np
 import pytest
 from statutil import chi2_critical, chi2_statistic
 
+from repro.core import deleda
 from repro.core import estep as estep_mod
-from repro.core.evaluation import (left_to_right_log_likelihood,
+from repro.core.evaluation import (EvalSpec, evaluate_heldout,
+                                   left_to_right_log_likelihood,
                                    log_perplexity,
+                                   log_perplexity_from_stats,
                                    relative_perplexity_error)
-from repro.core.lda import LDAConfig
+from repro.core.graph import watts_strogatz_graph
+from repro.core.lda import LDAConfig, eta_star
 from repro.data.lda_synthetic import CorpusSpec, make_corpus
 
 CFG = LDAConfig(n_topics=4, vocab_size=30, alpha=0.5, doc_len_max=12,
@@ -170,3 +182,210 @@ def test_left_to_right_masked_positions_do_not_score():
                                                      np.mean(llp))
     exact = _exact_lda_marginal([0, 2], np.asarray(beta), alpha)
     assert abs(np.mean(np.exp(lls)) - exact) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Evaluation layer: chunk/batch invariance of the fold_in streams
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def eval_setup(corpus):
+    stats = jax.random.uniform(jax.random.key(11),
+                               (CFG.n_topics, CFG.vocab_size)) + 0.01
+    return stats, eta_star(stats, CFG.tau)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 16])
+def test_chunk_invariance_bitwise(corpus, eval_setup, chunk):
+    """chunk_docs in {1, 7, B} produce bitwise-identical per-doc LLs."""
+    _stats, beta = eval_setup
+    key = jax.random.key(5)
+    full = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                            beta=beta, alpha=CFG.alpha, n_particles=4)
+    got = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                           beta=beta, alpha=CFG.alpha, n_particles=4,
+                           chunk_docs=chunk)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(got))
+
+
+def test_doc_stream_independent_of_batch_layout(corpus, eval_setup):
+    """The PRNG-stream regression: evaluating a document ALONE must give
+    the same floats as evaluating it inside a batch (the old
+    split(key, b) streams changed with batch size and position)."""
+    _stats, beta = eval_setup
+    key = jax.random.key(6)
+    batched = left_to_right_log_likelihood(
+        key, corpus.test_words, corpus.test_mask, beta, CFG.alpha,
+        n_particles=4)
+    for d in (0, 5, 15):
+        alone = left_to_right_log_likelihood(
+            key, corpus.test_words[d:d + 1], corpus.test_mask[d:d + 1],
+            beta, CFG.alpha, n_particles=4,
+            doc_ids=jnp.asarray([d], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(alone)[0],
+                                      np.asarray(batched)[d])
+
+
+def test_stats_path_matches_dense_beta_bitwise(corpus, eval_setup):
+    """The blocked-stats gather (dense AND vocab-sharded) is bitwise-equal
+    to evaluating eta_star(stats) — Scale-layer traces evaluate without
+    un-sharding and with no [K, V] beta temporary."""
+    stats, beta = eval_setup
+    key = jax.random.key(7)
+    ref = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                           beta=beta, alpha=CFG.alpha, n_particles=4)
+    from_stats = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                                  stats=stats, tau=CFG.tau,
+                                  alpha=CFG.alpha, n_particles=4)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(from_stats))
+    for s in (2, 5):
+        assert CFG.vocab_size % s == 0
+        sharded = stats.reshape(CFG.n_topics, s, CFG.vocab_size // s)
+        got = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                               stats=sharded, tau=CFG.tau,
+                               alpha=CFG.alpha, n_particles=4,
+                               chunk_docs=7)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_evaluate_heldout_requires_one_source(corpus, eval_setup):
+    stats, beta = eval_setup
+    with pytest.raises(ValueError, match="exactly ONE"):
+        evaluate_heldout(jax.random.key(0), corpus.test_words,
+                         corpus.test_mask, alpha=CFG.alpha)
+    with pytest.raises(ValueError, match="exactly ONE"):
+        evaluate_heldout(jax.random.key(0), corpus.test_words,
+                         corpus.test_mask, beta=beta, stats=stats,
+                         alpha=CFG.alpha)
+
+
+def test_empty_docs_excluded_from_lp(corpus, eval_setup):
+    """An all-masked (padded) document contributes log p = 0; the LP mean
+    must be over NON-EMPTY documents so padding cannot deflate it."""
+    _stats, beta = eval_setup
+    key = jax.random.key(8)
+    lp = log_perplexity(key, corpus.test_words, corpus.test_mask, beta,
+                        CFG.alpha, n_particles=4)
+    pad = 6
+    w_pad = jnp.concatenate([corpus.test_words,
+                             jnp.zeros((pad, CFG.doc_len_max),
+                                       corpus.test_words.dtype)])
+    m_pad = jnp.concatenate([corpus.test_mask,
+                             jnp.zeros((pad, CFG.doc_len_max), bool)])
+    lp_pad = log_perplexity(key, w_pad, m_pad, beta, CFG.alpha,
+                            n_particles=4)
+    np.testing.assert_allclose(float(lp_pad), float(lp), rtol=1e-6)
+    assert float(lp) > 0
+
+
+# ---------------------------------------------------------------------------
+# Evaluation layer: in-loop evaluation riding the training scan
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def inloop_setup():
+    cfg_lda = LDAConfig(n_topics=3, vocab_size=20, alpha=0.5,
+                        doc_len_max=8, n_gibbs=4, n_gibbs_burnin=2)
+    corpus = make_corpus(cfg_lda, jax.random.key(0),
+                         CorpusSpec(n_nodes=8, docs_per_node=4, n_test=6))
+    g = watts_strogatz_graph(8, 4, 0.3, seed=0)
+    sched, degs = deleda.make_run_inputs(g, 20, seed=0, kind="matching")
+    spec = EvalSpec(words=corpus.test_words, mask=corpus.test_mask,
+                    key=jax.random.key(7), n_particles=3, probe_nodes=2)
+    return cfg_lda, corpus, sched, degs, spec
+
+
+def test_inloop_eval_does_not_change_trajectory(inloop_setup):
+    cfg_lda, corpus, sched, degs, spec = inloop_setup
+    base = deleda.DeledaConfig(lda=cfg_lda, mode="async", batch_size=2)
+    withe = deleda.DeledaConfig(lda=cfg_lda, mode="async", batch_size=2,
+                                eval_every=10)
+    t0 = deleda.run_deleda(base, jax.random.key(1), corpus.words,
+                           corpus.mask, sched, degs, 20, record_every=10)
+    t1 = deleda.run_deleda(withe, jax.random.key(1), corpus.words,
+                           corpus.mask, sched, degs, 20, record_every=10,
+                           eval_spec=spec)
+    assert t0.eval_lp is None
+    np.testing.assert_array_equal(np.asarray(t0.stats),
+                                  np.asarray(t1.stats))
+    np.testing.assert_array_equal(np.asarray(t0.history),
+                                  np.asarray(t1.history))
+    assert t1.eval_lp.shape == (2, 2)
+
+
+def test_inloop_eval_matches_posthoc_streaming(inloop_setup):
+    """The on-device LP trajectory equals the post-hoc streaming
+    evaluation of the recorded history — any chunking (chunk invariance
+    again), so history replay is now strictly redundant."""
+    cfg_lda, corpus, sched, degs, spec = inloop_setup
+    cfg = deleda.DeledaConfig(lda=cfg_lda, mode="async", batch_size=2,
+                              eval_every=10)
+    trace = deleda.run_deleda(cfg, jax.random.key(1), corpus.words,
+                              corpus.mask, sched, degs, 20,
+                              record_every=10, eval_spec=spec)
+    for r in range(2):
+        for i in range(2):
+            post = log_perplexity_from_stats(
+                spec.key, spec.words, spec.mask, trace.history[r, i],
+                tau=cfg_lda.tau, alpha=cfg_lda.alpha, n_particles=3,
+                chunk_docs=4)
+            np.testing.assert_allclose(float(trace.eval_lp[r, i]),
+                                       float(post), rtol=1e-6)
+
+
+def test_inloop_eval_sharded_carry(inloop_setup):
+    """eval_every on a vocab-sharded run: LP comes straight from the
+    [n, K, S, V/S] carry (blocked gather), matching the dense run's LP
+    to the few-ulp tolerance of the sharded trajectory itself."""
+    cfg_lda, corpus, sched, degs, spec = inloop_setup
+    dense = deleda.DeledaConfig(lda=cfg_lda, mode="async", batch_size=2,
+                                eval_every=10)
+    sharded = deleda.DeledaConfig(lda=cfg_lda, mode="async", batch_size=2,
+                                  eval_every=10, vocab_shards=4)
+    td = deleda.run_deleda(dense, jax.random.key(1), corpus.words,
+                           corpus.mask, sched, degs, 20, record_every=10,
+                           eval_spec=spec)
+    ts = deleda.run_deleda(sharded, jax.random.key(1), corpus.words,
+                           corpus.mask, sched, degs, 20, record_every=10,
+                           eval_spec=spec)
+    np.testing.assert_allclose(np.asarray(ts.eval_lp),
+                               np.asarray(td.eval_lp), rtol=1e-4)
+
+
+def test_mesh_launcher_records_eval_trajectory(inloop_setup):
+    """run_mesh_deleda(eval_every=, eval_spec=) returns the in-loop LP
+    trajectory as a fourth element (3-tuple unchanged without eval)."""
+    from repro.core.graph import complete_graph
+    from repro.launch.gossip_sim import run_mesh_deleda
+    cfg_lda, corpus, _sched, _degs, spec = inloop_setup
+    words, mask = corpus.words[:4], corpus.mask[:4]
+    g = complete_graph(4)
+    out = run_mesh_deleda(cfg_lda, words, mask, g, 4, 2, seed=0,
+                          eval_every=2, eval_spec=spec)
+    assert len(out) == 4
+    _stats, _cons, _sec, lp = out
+    assert lp.shape == (2, 2)
+    assert np.isfinite(lp).all() and (lp > 0).all()
+    with pytest.raises(ValueError, match="needs an eval_spec"):
+        run_mesh_deleda(cfg_lda, words, mask, g, 4, 2, seed=0,
+                        eval_every=2)
+    with pytest.raises(ValueError, match="divisible by"):
+        run_mesh_deleda(cfg_lda, words, mask, g, 5, 2, seed=0,
+                        eval_every=2, eval_spec=spec)
+
+
+def test_eval_every_validation(inloop_setup):
+    cfg_lda, corpus, sched, degs, spec = inloop_setup
+    cfg = deleda.DeledaConfig(lda=cfg_lda, mode="async", batch_size=2,
+                              eval_every=10)
+    with pytest.raises(ValueError, match="needs an eval_spec"):
+        deleda.run_deleda(cfg, jax.random.key(1), corpus.words,
+                          corpus.mask, sched, degs, 20, record_every=10)
+    bad = deleda.DeledaConfig(lda=cfg_lda, mode="async", batch_size=2,
+                              eval_every=15)
+    with pytest.raises(ValueError, match="multiple of"):
+        deleda.run_deleda(bad, jax.random.key(1), corpus.words,
+                          corpus.mask, sched, degs, 20, record_every=10,
+                          eval_spec=spec)
+    with pytest.raises(ValueError, match="eval_every must be >= 0"):
+        deleda.DeledaConfig(lda=cfg_lda, eval_every=-1)

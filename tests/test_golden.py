@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import comm, deleda, estep
+from repro.core import comm, deleda, estep, evaluation
 from repro.core.graph import watts_strogatz_graph
 from repro.core.lda import LDAConfig
 from repro.data.lda_synthetic import CorpusSpec, make_corpus
@@ -37,6 +37,10 @@ KINDS = ("edge", "matching")
 # Scale layer: vocab-sharded carry must ride the SAME trajectory
 SHARDED_COMBOS = [("dense", "dense"), ("pallas", "pallas")]
 SHARDS = 4
+# Evaluation layer: the in-loop held-out LP trajectory is pinned too (the
+# estimator's fold_in(key, doc_id)/fold_in(doc_key, position) stream is a
+# numeric contract — silent stream drift would un-pin every figure)
+EVAL_SHARDS = (1, SHARDS)
 
 
 def _fingerprint(trace: deleda.DeledaTrace) -> dict:
@@ -52,7 +56,7 @@ def _fingerprint(trace: deleda.DeledaTrace) -> dict:
 
 
 def _run(comm_backend: str, estep_backend: str, kind: str,
-         vocab_shards: int = 1):
+         vocab_shards: int = 1, eval_every: int = 0):
     corpus = make_corpus(CFG, jax.random.key(0),
                          CorpusSpec(n_nodes=N, docs_per_node=4, n_test=4))
     g = watts_strogatz_graph(N, 4, 0.3, seed=0)
@@ -60,9 +64,22 @@ def _run(comm_backend: str, estep_backend: str, kind: str,
     cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2,
                               comm_backend=comm_backend,
                               estep_backend=estep_backend,
-                              vocab_shards=vocab_shards)
+                              vocab_shards=vocab_shards,
+                              eval_every=eval_every)
+    spec = None
+    if eval_every:
+        spec = evaluation.EvalSpec(
+            words=corpus.test_words, mask=corpus.test_mask,
+            key=jax.random.key(7), n_particles=4, probe_nodes=2)
     return deleda.run_deleda(cfg, jax.random.key(1), corpus.words,
-                             corpus.mask, sched, degs, T, record_every=10)
+                             corpus.mask, sched, degs, T, record_every=10,
+                             eval_spec=spec)
+
+
+def _eval_fingerprint(trace: deleda.DeledaTrace) -> dict:
+    lp = np.asarray(trace.eval_lp, np.float64)
+    return {"shape": list(lp.shape),
+            "eval_lp": [float(v) for v in lp.reshape(-1)]}
 
 
 def _golden() -> dict:
@@ -83,6 +100,10 @@ def regen_if_requested():
         for cb, eb in SHARDED_COMBOS:
             payload[f"matching:{cb}:{eb}:vs{SHARDS}"] = _fingerprint(
                 _run(cb, eb, "matching", vocab_shards=SHARDS))
+        for vs in EVAL_SHARDS:
+            payload[f"eval:matching:dense:dense:vs{vs}"] = (
+                _eval_fingerprint(_run("dense", "dense", "matching",
+                                       vocab_shards=vs, eval_every=10)))
         with open(GOLDEN_PATH, "w") as f:
             json.dump(payload, f, indent=2)
     yield
@@ -108,6 +129,26 @@ def test_sharded_trace_matches_golden(cb, eb):
     np.testing.assert_allclose(got["mass"], dense["mass"], rtol=1e-4)
     np.testing.assert_allclose(got["probe"], dense["probe"], rtol=3e-3,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("vs", EVAL_SHARDS)
+def test_eval_trace_matches_golden(vs):
+    """The in-loop held-out LP trajectory is pinned: the estimator's PRNG
+    streams and the blocked-stats gather are numeric contracts. The
+    sharded entry must also match the dense entry (chunk/shard
+    invariance of the evaluator + few-ulp sharded trajectory)."""
+    key = f"eval:matching:dense:dense:vs{vs}"
+    golden = _golden()
+    if key not in golden:
+        pytest.skip(f"{key} not in goldens; refresh with GOLDEN_REGEN=1")
+    got = _eval_fingerprint(_run("dense", "dense", "matching",
+                                 vocab_shards=vs, eval_every=10))
+    assert got["shape"] == golden[key]["shape"]
+    np.testing.assert_allclose(got["eval_lp"], golden[key]["eval_lp"],
+                               rtol=1e-5)
+    dense = golden["eval:matching:dense:dense:vs1"]
+    np.testing.assert_allclose(got["eval_lp"], dense["eval_lp"],
+                               rtol=1e-4)
 
 
 @pytest.mark.parametrize("kind", KINDS)
