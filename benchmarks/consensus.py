@@ -21,6 +21,7 @@ import os
 import jax
 import numpy as np
 
+from benchmarks import bench_util
 from repro.core import deleda
 from repro.core.graph import (complete_graph, ring_graph,
                               watts_strogatz_graph)
@@ -83,7 +84,7 @@ def main(argv=None):
     print(f"\nfinal consensus by topology: {finals}")
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(out, f, indent=2)
+        json.dump(bench_util.stamp(out), f, indent=2)
     print(f"wrote {args.out}")
 
 

@@ -26,6 +26,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import bench_util
 from repro.core import estep as estep_mod
 from repro.core.lda import LDAConfig, eta_star
 
@@ -116,7 +117,7 @@ def main(argv=None):
                    backend_platform=jax.default_backend(),
                    rows=rows)
     with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(bench_util.stamp(payload), f, indent=2)
     print(f"wrote {args.out}")
 
 

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import bench_util
 from repro.core import estep as estep_mod
 from repro.core.evaluation import evaluate_heldout
 from repro.core.lda import LDAConfig, eta_star, init_stats
@@ -217,7 +218,7 @@ def main(argv=None):
     rows = [bench_regime(name, REGIMES[name]) for name in args.regimes]
     payload = dict(backend_platform=jax.default_backend(), rows=rows)
     with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(bench_util.stamp(payload), f, indent=2)
     print(f"wrote {args.out}")
 
 

@@ -23,6 +23,7 @@ import argparse
 import json
 import os
 
+from benchmarks import bench_util
 from benchmarks._deleda_experiment import get_scale, run_experiment
 
 
@@ -38,7 +39,7 @@ def main(argv=None):
     res = run_experiment(get_scale(args.scale), seed=args.seed)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(res, f, indent=2)
+        json.dump(bench_util.stamp(res), f, indent=2)
 
     print("\niter  " + "  ".join(f"{k:>18s}" for k in res["runs"]))
     for i, it in enumerate(res["iterations"]):

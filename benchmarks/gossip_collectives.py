@@ -32,6 +32,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import bench_util
 from repro.configs import get_config, list_archs
 from repro.core import comm as comm_mod
 from repro.core import decentralized as dec
@@ -119,7 +120,7 @@ def bench_backends(n: int, k_topics: int, vocab: int, rounds: int,
 
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
-        json.dump(results, f, indent=2)
+        json.dump(bench_util.stamp(results), f, indent=2)
     print(f"wrote {out_path}")
     return results
 

@@ -79,6 +79,14 @@ def main(argv=None):
     sections.append("scale")
 
     print("=" * 72)
+    print("sparse: unique-token (CSR) vs dense E-step on Zipf corpora")
+    print("=" * 72)
+    from benchmarks import sparse_bench
+    sparse_bench.main([] if args.scale == "paper"
+                      else ["--regimes", "paper", "mid"])
+    sections.append("sparse")
+
+    print("=" * 72)
     print("eval: streaming/sharded held-out evaluation vs legacy path")
     print("=" * 72)
     from benchmarks import eval_bench

@@ -43,11 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import bench_util
 from repro.core import comm as comm_mod
 from repro.core import deleda, estep as estep_mod
 from repro.core.evaluation import EvalSpec
 from repro.core.graph import watts_strogatz_graph
 from repro.core.lda import LDAConfig, eta_star, init_stats
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
 
 REGIMES = {
     "paper": dict(n=50, v=1000, k=5, b=20, l=32, n_gibbs=30, burnin=15,
@@ -102,27 +104,24 @@ def bench_estep_paths(cfg: LDAConfig, rg: dict) -> dict:
 def _make_run_inputs(cfg: LDAConfig, rg: dict, docs_per_node: int = 8,
                      n_test: int = 8):
     n = rg["n"]
-    words = jax.random.randint(jax.random.key(4),
-                               (n, docs_per_node, rg["l"]), 0,
-                               cfg.vocab_size)
-    mask = jax.random.uniform(jax.random.key(5),
-                              (n, docs_per_node, rg["l"])) < 0.9
+    # a real generated corpus (not uniform random words) so the row can
+    # record the drawn-length truncation diagnostic
+    corpus = make_corpus(cfg, jax.random.key(4),
+                         CorpusSpec(n_nodes=n, docs_per_node=docs_per_node,
+                                    n_test=n_test))
     graph = watts_strogatz_graph(n, 4, 0.3, seed=0)
     sched, degs = deleda.make_run_inputs(graph, rg["steps"], seed=0,
                                          kind="matching")
     # in-loop held-out evaluation rides the same scan (Evaluation layer):
     # LP straight from the (sharded) carried statistic, no [K, V] beta
-    test_w = jax.random.randint(jax.random.key(7), (n_test, rg["l"]), 0,
-                                cfg.vocab_size)
-    test_m = jax.random.uniform(jax.random.key(8), (n_test, rg["l"])) < 0.9
-    spec = EvalSpec(words=test_w, mask=test_m, key=jax.random.key(9),
-                    n_particles=2, probe_nodes=2)
-    return words, mask, sched, degs, spec
+    spec = EvalSpec(words=corpus.test_words, mask=corpus.test_mask,
+                    key=jax.random.key(9), n_particles=2, probe_nodes=2)
+    return corpus.words, corpus.mask, sched, degs, spec, corpus
 
 
 def bench_run_deleda(cfg: LDAConfig, rg: dict, vocab_shards: int,
                      run_inputs) -> dict:
-    words, mask, sched, degs, spec = run_inputs
+    words, mask, sched, degs, spec, _corpus = run_inputs
     dcfg = deleda.DeledaConfig(lda=cfg, mode="sync", batch_size=rg["b"],
                                vocab_shards=vocab_shards,
                                eval_every=rg["steps"])
@@ -204,12 +203,13 @@ def main(argv=None):
             estep_blocked_s=round(ep["blocked_s"], 4),
             estep_blocked_speedup=ep["blocked_speedup"],
             run_s_per_step=round(run_sharded["s_per_step"], 4),
+            length_truncation_frac=run_inputs[5].length_truncation_frac,
             inloop_eval_lp=round(run_sharded["eval_lp"], 4),
             sharded_vs_dense_max_err=allclose_dense, **wb))
 
     payload = dict(backend_platform=jax.default_backend(), rows=rows)
     with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(bench_util.stamp(payload), f, indent=2)
     print(f"wrote {args.out}")
 
 

@@ -24,6 +24,7 @@ import sys
 
 sys.path.insert(0, ".")
 
+from benchmarks import bench_util
 from benchmarks._deleda_experiment import (get_scale,  # noqa: E402
                                            run_scenario_experiment)
 
@@ -66,7 +67,7 @@ def main(argv=None):
     res["accept"] = bool(ok)
 
     with open(args.out, "w") as f:
-        json.dump(res, f, indent=2)
+        json.dump(bench_util.stamp(res), f, indent=2)
     print(f"wrote {args.out} (accept={res['accept']})")
     if not ok:
         raise SystemExit(1)

@@ -1,0 +1,309 @@
+"""Sparse-corpus-layer benchmark: unique-token (CSR) vs dense E-step.
+
+Real vocabularies are Zipf-distributed: a few head words soak up most
+tokens, so a document of L positions carries far fewer than L distinct
+words. The dense E-step resamples every POSITION (O(L) categorical draws
+per sweep); the sparse layer resamples every UNIQUE WORD once with its
+count as weight (O(U) draws). On a Zipf-realistic corpus with
+mean-L / mean-unique >= 4 the sparse path must clear a >= 3x tokens/sec
+acceptance gate against the dense oracle on the SAME corpus.
+
+Regimes (all use a Zipf(2.2) word envelope + lognormal document lengths,
+the realistic-corpus knobs of repro.data.lda_synthetic):
+
+    paper  n=50,   V=1k    (+ stats-path bitwise check and a dense-vs-
+                            unique run_deleda trajectory agreement gate)
+    mid    n=512,  V=10k
+    big    n=1024, V=50k-shaped
+
+Document generation at V=50k materializes a [L, V] categorical per doc,
+so each regime samples a small doc pool with make_corpus (recording the
+length-truncation diagnostic) and tiles it across nodes — the tile count
+is recorded per row, nothing is silently capped.
+
+Usage: PYTHONPATH=src python -m benchmarks.sparse_bench [--regimes paper]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import bench_util
+from repro.core import deleda, estep as estep_mod
+from repro.core.graph import watts_strogatz_graph
+from repro.core.lda import (LDAConfig, beta_distance, eta_star,
+                            init_stats)
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+# the Zipf-realistic corpus: power-law word envelope + lognormal lengths
+# (mean length ~ 90 tokens, essentially no clipping at doc_len_max=256)
+ZIPF = dict(zipf_exponent=2.2, doc_len_lognormal=(4.4, 0.4))
+
+# gate="full" applies the >= 3x acceptance to the whole E-step call;
+# gate="sweeps" to the Gibbs-sweep stage alone — at V >= 50k the [K, V]
+# statistics materialization dominates BOTH layouts identically (it is
+# what vocab sharding addresses, not the corpus layout), so the big
+# regime gates the stage the sparse layer actually optimizes and the row
+# still records the end-to-end numbers
+REGIMES = {
+    "paper": dict(n=50, v=1000, k=5, b=8, l=256, n_gibbs=8, burnin=4,
+                  gen_docs=64, iters=3, steps=8, gate="full"),
+    "mid": dict(n=512, v=10_000, k=5, b=4, l=256, n_gibbs=6, burnin=3,
+                gen_docs=64, iters=2, steps=0, gate="full"),
+    "big": dict(n=1024, v=50_000, k=4, b=2, l=128, n_gibbs=4, burnin=2,
+                gen_docs=32, iters=2, steps=0, gate="sweeps"),
+}
+
+MIN_SPEEDUP = 3.0       # acceptance: unique >= 3x dense tokens/sec ...
+MIN_RATIO = 4.0         # ... whenever mean-L / mean-unique >= 4
+
+
+def _timeit(fn, *args, iters=2):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def _tiled_batch(corpus, rg):
+    """Tile the generated doc pool to the [n, b, L] E-step fan."""
+    n, b = rg["n"], rg["b"]
+    flat_w = corpus.words.reshape(-1, corpus.words.shape[-1])
+    flat_m = corpus.mask.reshape(-1, corpus.mask.shape[-1])
+    pool = flat_w.shape[0]
+    reps = -(-(n * b) // pool)
+    words = jnp.tile(flat_w, (reps, 1))[:n * b].reshape(n, b, -1)
+    mask = jnp.tile(flat_m, (reps, 1))[:n * b].reshape(n, b, -1)
+    return words, mask
+
+
+def bench_estep_layouts(cfg: LDAConfig, rg: dict, corpus) -> dict:
+    """Dense per-position vs unique count-weighted fused E-step over the
+    same Zipf minibatch fan (the per-round hot path of run_deleda)."""
+    n = rg["n"]
+    words, mask = _tiled_batch(corpus, rg)
+    uw, counts = estep_mod.unique_view(
+        words.reshape(-1, words.shape[-1]),
+        mask.reshape(-1, mask.shape[-1]))
+    u_dim = uw.shape[-1]
+    uw = uw.reshape(n, rg["b"], u_dim)
+    counts = counts.reshape(n, rg["b"], u_dim)
+
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(0), i))(
+        jnp.arange(n))
+    stats = jax.vmap(lambda k: init_stats(cfg, k))(
+        jax.random.split(jax.random.key(3), n))
+    backend_d = estep_mod.get_estep("dense")
+    backend_s = estep_mod.get_sparse_estep("dense")
+
+    dense = jax.jit(lambda kk, w, m, st: estep_mod.estep_batch_from_stats(
+        backend_d, cfg, kk, w, m, st))
+    unique = jax.jit(
+        lambda kk, w, c, st: estep_mod.estep_batch_from_stats_unique(
+            backend_s, cfg, kk, w, c, st))
+
+    t_d, out_d = _timeit(dense, keys, words, mask, stats,
+                         iters=rg["iters"])
+    t_u, out_u = _timeit(unique, keys, uw, counts, stats,
+                         iters=rg["iters"])
+
+    # the per-word token mass (sum over topics) is sampler-independent:
+    # both layouts must scatter the identical word histogram
+    marg_err = float(jnp.abs(out_d.sum(1) - out_u.sum(1)).max())
+    assert marg_err < 1e-4, f"word-marginal mass diverged: {marg_err}"
+
+    # the sweep stage alone (beta_w gathered up front): what the
+    # O(U)-draws sparse layer optimizes, separate from the layout-
+    # independent [K, V] statistics scatter that dominates at large V
+    maskf = mask.astype(stats.dtype)
+    countf = counts.astype(stats.dtype)
+    bw_d = jax.jit(lambda: jax.vmap(estep_mod.beta_w_from_stats,
+                                    (0, 0, None))(stats, words, cfg.tau))()
+    bw_u = jax.jit(lambda: jax.vmap(estep_mod.beta_w_from_stats,
+                                    (0, 0, None))(stats, uw, cfg.tau))()
+    jax.block_until_ready((bw_d, bw_u))
+    t_sd, _ = _timeit(jax.jit(lambda: estep_mod.fused_sweeps(
+        backend_d, cfg, keys, bw_d, maskf)), iters=rg["iters"])
+    t_su, _ = _timeit(jax.jit(lambda: estep_mod.fused_sweeps_sparse(
+        backend_s, cfg, keys, bw_u, countf)), iters=rg["iters"])
+
+    tokens = float(mask.sum())
+    mean_len = float(mask.sum(-1).mean())
+    mean_uniq = float((counts > 0).sum(-1).mean())
+    return dict(tokens=tokens, u_dim=u_dim,
+                mean_len=mean_len, mean_unique=mean_uniq,
+                unique_ratio=mean_len / mean_uniq,
+                dense_s=t_d, unique_s=t_u,
+                tokens_per_s_dense=tokens / t_d,
+                tokens_per_s_unique=tokens / t_u,
+                speedup=t_d / t_u,
+                sweeps_dense_s=t_sd, sweeps_unique_s=t_su,
+                sweeps_speedup=t_sd / t_su,
+                word_marginal_err=marg_err)
+
+
+def check_stats_path_bitwise(cfg: LDAConfig, corpus, rg) -> float:
+    """The segmented scatter is the dense scatter given equal per-token
+    mass: place each unique slot's per_unique row at the word's first
+    occurrence and require bitwise-equal [K, V] statistics."""
+    words = corpus.words.reshape(-1, corpus.words.shape[-1])[:64]
+    mask = corpus.mask.reshape(-1, corpus.mask.shape[-1])[:64]
+    uw, counts = estep_mod.unique_view(words, mask)
+    b, u_dim = uw.shape
+    per_unique = jax.random.uniform(jax.random.key(5),
+                                    (b, u_dim, cfg.n_topics))
+    per_unique = per_unique * (counts > 0)[..., None]
+
+    w_h, m_h, uw_h = (np.asarray(words), np.asarray(mask), np.asarray(uw))
+    eq = (w_h[:, None, :] == uw_h[:, :, None]) & m_h[:, None, :]
+    first = eq.argmax(-1)                                   # [B, U]
+    per_pos = np.zeros((b, words.shape[1], cfg.n_topics), np.float32)
+    bi, ui = np.nonzero(np.asarray(counts) > 0)
+    per_pos[bi, first[bi, ui]] = np.asarray(per_unique)[bi, ui]
+
+    s_u = jax.jit(estep_mod.stats_from_unique, static_argnums=2)(
+        uw, per_unique, cfg.vocab_size, counts.astype(jnp.float32))
+    s_d = jax.jit(estep_mod.stats_from_per_pos, static_argnums=2)(
+        words, jnp.asarray(per_pos), cfg.vocab_size,
+        mask.astype(jnp.float32))
+    if not bool((s_u == s_d).all()):
+        raise AssertionError("stats_from_unique != stats_from_per_pos")
+    return 0.0
+
+
+def check_trajectory_agreement(cfg: LDAConfig, rg: dict, corpus,
+                               u_dim: int) -> dict:
+    """run_deleda dense-layout vs unique-layout trajectory gate.
+
+    The count-weighted chain is a different valid sampler, so raw
+    statistics are not comparable bit-for-bit; the gate is MODEL QUALITY:
+    both layouts must recover the generating topics equally well. The
+    unique run's permutation-matched beta distance to the known
+    ``beta_star`` must land within the gate band around the dense
+    oracle's (absolute floor + a relative margin), and token mass must be
+    conserved exactly across layouts."""
+    n, steps = rg["n"], rg["steps"]
+    words, mask = _tiled_batch(corpus, dict(rg, b=8))
+    g = watts_strogatz_graph(n, 4, 0.3, seed=0)
+    sched, degs = deleda.make_run_inputs(g, steps, seed=0, kind="matching")
+
+    def final_stats(layout, seed):
+        dcfg = deleda.DeledaConfig(
+            lda=cfg, mode="sync", batch_size=4, corpus_layout=layout,
+            max_unique=u_dim if layout == "unique" else 0)
+        tr = deleda.run_deleda(dcfg, jax.random.key(seed), words, mask,
+                               sched, degs, steps, record_every=steps)
+        return np.asarray(tr.stats, np.float64)          # [n, K, V]
+
+    def recovery(stats):
+        beta = eta_star(jnp.asarray(stats.mean(0), jnp.float32), cfg.tau)
+        return float(beta_distance(beta, corpus.beta_star))
+
+    d0, d1 = final_stats("dense", 0), final_stats("dense", 1)
+    u0 = final_stats("unique", 0)
+    # token mass is conserved exactly across layouts
+    mass_rel = abs(u0.sum() - d0.sum()) / abs(d0.sum())
+    assert mass_rel < 1e-4, f"layout mass drift: {mass_rel:.2e}"
+    bd_d0, bd_d1, bd_u = recovery(d0), recovery(d1), recovery(u0)
+    spread = abs(bd_d1 - bd_d0)
+    band = max(3.0 * spread, 0.15 * bd_d0, 0.01)
+    assert abs(bd_u - bd_d0) <= band, (
+        f"unique layout recovers worse topics: beta distance {bd_u:.4f} "
+        f"vs dense {bd_d0:.4f} (band {band:.4f})")
+    return dict(traj_beta_dist_dense=round(bd_d0, 5),
+                traj_beta_dist_dense_seed2=round(bd_d1, 5),
+                traj_beta_dist_unique=round(bd_u, 5),
+                traj_gate_band=round(band, 5),
+                traj_mass_rel_err=float(mass_rel))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regimes", nargs="*", default=sorted(REGIMES),
+                    choices=sorted(REGIMES))
+    ap.add_argument("-o", "--out", default="BENCH_sparse.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for name in args.regimes:
+        rg = REGIMES[name]
+        cfg = LDAConfig(n_topics=rg["k"], vocab_size=rg["v"], alpha=0.5,
+                        doc_len_max=rg["l"], n_gibbs=rg["n_gibbs"],
+                        n_gibbs_burnin=rg["burnin"])
+        print(f"--- {name}: n={rg['n']} V={rg['v']} K={rg['k']} "
+              f"L={rg['l']} (Zipf {ZIPF['zipf_exponent']}, pool "
+              f"{rg['gen_docs']} docs tiled to {rg['n'] * rg['b']})")
+        pool_nodes = max(rg["gen_docs"] // 4, 1)
+        corpus = make_corpus(cfg, jax.random.key(1),
+                             CorpusSpec(n_nodes=pool_nodes, docs_per_node=4,
+                                        n_test=4, **ZIPF))
+
+        ep = bench_estep_layouts(cfg, rg, corpus)
+        print(f"    mean len {ep['mean_len']:6.1f}  mean unique "
+              f"{ep['mean_unique']:6.1f}  ratio {ep['unique_ratio']:5.2f}"
+              f"  (U={ep['u_dim']}, trunc "
+              f"{corpus.length_truncation_frac:.3f})")
+        print(f"    estep  dense {ep['dense_s'] * 1e3:9.1f} ms   "
+              f"unique {ep['unique_s'] * 1e3:9.1f} ms   "
+              f"{ep['tokens_per_s_dense'] / 1e3:8.0f} -> "
+              f"{ep['tokens_per_s_unique'] / 1e3:8.0f} ktok/s   "
+              f"speedup {ep['speedup']:5.2f}x")
+        print(f"    sweeps dense {ep['sweeps_dense_s'] * 1e3:9.1f} ms   "
+              f"unique {ep['sweeps_unique_s'] * 1e3:9.1f} ms   "
+              f"speedup {ep['sweeps_speedup']:5.2f}x  "
+              f"(gate: {rg['gate']})")
+        gated = (ep["speedup"] if rg["gate"] == "full"
+                 else ep["sweeps_speedup"])
+        if ep["unique_ratio"] >= MIN_RATIO:
+            assert gated >= MIN_SPEEDUP, (
+                f"{name}: unique {rg['gate']} path {gated:.2f}x < "
+                f"{MIN_SPEEDUP}x acceptance gate at ratio "
+                f"{ep['unique_ratio']:.2f}")
+
+        extra = {}
+        if name == "paper":
+            check_stats_path_bitwise(cfg, corpus, rg)
+            print("    stats path: segmented scatter bitwise == dense "
+                  "scatter")
+            extra = check_trajectory_agreement(cfg, rg, corpus,
+                                               ep["u_dim"])
+            print(f"    run_deleda trajectory: beta distance unique "
+                  f"{extra['traj_beta_dist_unique']:.4f} vs dense "
+                  f"{extra['traj_beta_dist_dense']:.4f} "
+                  f"(band {extra['traj_gate_band']:.4f})")
+
+        rows.append(dict(
+            regime=name, n=rg["n"], v=rg["v"], k=rg["k"], l=rg["l"],
+            n_gibbs=rg["n_gibbs"], doc_pool=rg["gen_docs"],
+            docs_tiled_to=rg["n"] * rg["b"],
+            zipf_exponent=ZIPF["zipf_exponent"],
+            length_truncation_frac=corpus.length_truncation_frac,
+            mean_len=round(ep["mean_len"], 2),
+            mean_unique=round(ep["mean_unique"], 2),
+            unique_ratio=round(ep["unique_ratio"], 3),
+            u_dim=ep["u_dim"],
+            tokens_per_s_dense=round(ep["tokens_per_s_dense"], 1),
+            tokens_per_s_unique=round(ep["tokens_per_s_unique"], 1),
+            speedup=round(ep["speedup"], 3),
+            sweeps_speedup=round(ep["sweeps_speedup"], 3),
+            gate=rg["gate"],
+            word_marginal_err=ep["word_marginal_err"], **extra))
+
+    payload = dict(rows=rows)
+    with open(args.out, "w") as f:
+        json.dump(bench_util.stamp(payload), f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

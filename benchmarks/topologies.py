@@ -14,6 +14,7 @@ import os
 
 import jax
 
+from benchmarks import bench_util
 from repro.core import deleda
 from repro.core.graph import (complete_graph, grid_graph, hypercube_graph,
                               ring_graph, star_graph, watts_strogatz_graph)
@@ -57,7 +58,7 @@ def main(argv=None):
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(rows, f, indent=2)
+        json.dump(bench_util.stamp(rows), f, indent=2)
     print(f"wrote {args.out}")
 
 

@@ -81,6 +81,13 @@ class DeledaConfig:
     comm_backend: str = "dense"      # gossip mixing: "dense" | "pallas"
     estep_backend: str = "dense"     # local E-steps: "dense" | "pallas"
     vocab_shards: int = 1            # Scale layer: split V into S blocks
+    corpus_layout: str = "dense"     # Sparse corpus layer: "dense" runs
+                                     # the per-position oracle sweeps,
+                                     # "unique" the count-weighted CSR
+                                     # sweeps over (word_id, count) pairs
+    max_unique: int = 0              # U of the unique view (0 = L, always
+                                     # sufficient); docs with more distinct
+                                     # words than U drop the overflow
     eval_every: int = 0              # Evaluation layer: in-loop held-out
                                      # LP every this many steps (0 = off;
                                      # needs an EvalSpec, must be a
@@ -116,6 +123,15 @@ class DeledaConfig:
             raise ValueError(
                 f"estep_backend must be one of {estep_mod.ESTEP_BACKENDS}, "
                 f"got {self.estep_backend!r}")
+        if self.corpus_layout not in ("dense", "unique"):
+            raise ValueError(f"corpus_layout must be dense|unique, "
+                             f"got {self.corpus_layout!r}")
+        if self.max_unique < 0:
+            raise ValueError(f"max_unique must be >= 0 (0 = use L), "
+                             f"got {self.max_unique}")
+        if self.max_unique and self.corpus_layout != "unique":
+            raise ValueError("max_unique only applies to "
+                             "corpus_layout='unique'")
 
 
 class DeledaTrace(NamedTuple):
@@ -182,6 +198,19 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     blends are elementwise or identical-order) and the returned trace is
     always densely shaped.
 
+    ``config.corpus_layout = "unique"`` (the Sparse corpus layer) converts
+    the dense [n, D, L] documents ONCE, inside the jit, to per-document
+    (word_id, count) pairs padded to U = ``config.max_unique`` slots
+    (0 = L, always sufficient) and runs every local E-step as
+    count-weighted sweeps over the U unique slots instead of per-position
+    sweeps over the L tokens — O(U) categorical draws per sweep. On
+    Zipf-shaped corpora with many within-document duplicates this is the
+    dominant cost win (benchmarks/sparse_bench.py); the blocked move
+    (all c copies of a word redrawn together) is a different, valid
+    sampler than c per-copy moves, statistically indistinguishable at the
+    trajectory level and bit-identical when every count is 1
+    (tests/test_sparse.py). Dense stays the default and the oracle.
+
     ``config.eval_every = E`` (the Evaluation layer) rides the same scan:
     at every E-th step the held-out LP of the first
     ``eval_spec.probe_nodes`` nodes is computed ON-DEVICE straight from
@@ -207,7 +236,16 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
     n, d, l = words.shape
     kind = _resolve_schedule_kind(schedule, n, schedule_kind)
     comm = comm_mod.get_communicator(config.comm_backend)
-    estep = estep_mod.get_estep(config.estep_backend)
+    unique = config.corpus_layout == "unique"
+    if unique:
+        estep = estep_mod.get_sparse_estep(config.estep_backend)
+        # one sort+segment pass over the whole corpus, inside the jit;
+        # from here on `words` holds unique ids and `mask` the counts
+        # (every consumer below only indexes rows or passes them through)
+        words, mask = estep_mod.dense_to_unique(
+            words, mask, config.max_unique or l)
+    else:
+        estep = estep_mod.get_estep(config.estep_backend)
     rho_fn = make_rho_schedule(config.rho_kind, kappa=config.rho_kappa,
                                t0=config.rho_t0)
     n_topics, vocab = config.lda.n_topics, config.lda.vocab_size
@@ -276,9 +314,15 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
         keys = jax.vmap(lambda i: jax.random.fold_in(k_gibbs, i))(ids)
         # blocked-stats E-step: beta columns are gathered straight from
         # the (possibly vocab-sharded) statistic — no dense [A, K, V]
-        # eta_star temporary; bitwise-equal to the materialized path
-        stats_hat = estep_mod.estep_batch_from_stats(
-            estep, config.lda, keys, bw, bm, stats_rows)  # [A, K, V]
+        # eta_star temporary; bitwise-equal to the materialized path.
+        # In the unique layout bw/bm hold (word_id, count) rows instead
+        # of (token, mask) rows and the sweeps are count-weighted.
+        if unique:
+            stats_hat = estep_mod.estep_batch_from_stats_unique(
+                estep, config.lda, keys, bw, bm, stats_rows)
+        else:
+            stats_hat = estep_mod.estep_batch_from_stats(
+                estep, config.lda, keys, bw, bm, stats_rows)  # [A, K, V]
         stats_hat = stats_hat.reshape(stats_rows.shape)
         t = steps_rows + 1
         rho = (rho_fn(t) * corr_rows).astype(stats_rows.dtype)
@@ -363,13 +407,20 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
         probe = min(spec.probe_nodes, n)
         blocks_per_eval = config.eval_every // record_every
         n_eval = n_steps // config.eval_every
+        if spec.layout == "unique":
+            # one conversion outside the scan; the in-loop evaluator then
+            # runs the count-weighted left-to-right over U unique slots
+            ew, em = estep_mod.dense_to_unique(spec.words, spec.mask)
+        else:
+            ew, em = spec.words, spec.mask
 
         def eval_block(carry, inp):
             carry, (hist, cons) = jax.lax.scan(record_block, carry, inp)
             stats, _steps = carry
             lp = jax.vmap(lambda st: eval_mod.heldout_lp_from_stats(
-                spec.key, spec.words, spec.mask, st, config.lda.tau,
-                config.lda.alpha, spec.n_particles))(stats[:probe])
+                spec.key, ew, em, st, config.lda.tau,
+                config.lda.alpha, spec.n_particles,
+                spec.layout))(stats[:probe])
             return carry, (hist, cons, lp)
 
         xs = jax.tree_util.tree_map(

@@ -31,6 +31,27 @@ all now share — the compute-side twin of :mod:`repro.core.comm`:
   PRNG streams come from the caller's ``fold_in(key, node_id)`` keys, and
   every sweep op is elementwise or a last-axis reduction, so the fused path
   is bit-identical to vmapping the single-node E-step (tests/test_estep.py).
+
+* the **sparse corpus path** (DESIGN.md section 9) — real corpora are
+  count matrices where L >> unique tokens per document. The unique-token
+  (CSR) layout stores each document as ``(word_id, count)`` pairs padded
+  to U slots (:func:`dense_to_unique`, a jit-able sort+segment pass);
+  :func:`gibbs_sweeps_sparse` keeps the topic state per UNIQUE token as a
+  ``[U, K]`` count split (how many of a word's ``c`` copies sit in each
+  topic) and resamples all ``c`` copies with one count-weighted
+  categorical draw per slot — O(U) work per sweep instead of O(L). With
+  all counts equal to one the sparse sweep is bit-identical to the dense
+  sweep on the sorted document (same uniforms, same op order); with
+  duplicates it is a blocked-move approximation validated statistically
+  against the dense sampler (tests/test_sparse.py).
+  :func:`stats_from_unique` is the segmented scatter counterpart of
+  :func:`stats_from_per_pos` — count-weighted rows into the same [K, V]
+  (or blocked [K, S, V/S]) statistic through the identical scatter-add
+  machinery, so given equal per-token mass the two paths produce the
+  same bits. :class:`DenseSparseEStep` / :class:`PallasSparseEStep`
+  mirror the dense registry (the kernel lives in ``kernels/lda_sparse``)
+  and :func:`estep_batch_from_stats_unique` is the fused-across-awake-
+  nodes front-end consumed by ``run_deleda(corpus_layout="unique")``.
 """
 
 from __future__ import annotations
@@ -44,18 +65,38 @@ import jax.numpy as jnp
 from repro.core.lda import LDAConfig
 
 __all__ = [
-    "GibbsResult", "sample_from_unnormalized", "gibbs_position_update",
-    "gibbs_sweeps_dense", "draw_gibbs_randoms", "stats_from_per_pos",
+    "GibbsResult", "SparseGibbsResult", "sample_from_unnormalized",
+    "gibbs_position_update",
+    "gibbs_sweeps_dense", "gibbs_sweeps_sparse", "draw_gibbs_randoms",
+    "stats_from_per_pos", "stats_from_unique", "dense_to_unique",
+    "unique_view",
     "count_nonempty", "beta_w_from_stats", "DenseEStep", "PallasEStep",
-    "get_estep",
-    "ESTEP_BACKENDS", "fused_sweeps", "estep_batch",
-    "estep_batch_from_stats",
+    "DenseSparseEStep", "PallasSparseEStep", "get_estep",
+    "get_sparse_estep",
+    "ESTEP_BACKENDS", "SPARSE_ESTEP_BACKENDS", "fused_sweeps",
+    "estep_batch",
+    "estep_batch_from_stats", "fused_sweeps_sparse",
+    "estep_batch_from_stats_unique",
 ]
 
 
 class GibbsResult(NamedTuple):
     stats: jax.Array      # [K, V] mean per-document sufficient statistics
     z: jax.Array          # [B, L] final topic assignments (int32)
+    n_dk: jax.Array       # [B, K] final doc-topic counts
+    theta: jax.Array      # [B, K] posterior-mean topic proportions
+
+
+class SparseGibbsResult(NamedTuple):
+    """E-step result in the unique-token (CSR) layout.
+
+    The per-position ``z`` of :class:`GibbsResult` becomes the count
+    split ``m``: ``m[b, u, k]`` is how many of unique word u's ``c``
+    copies sit in topic k (``m.sum(-1) == counts``).
+    """
+
+    stats: jax.Array      # [K, V] mean per-document sufficient statistics
+    m: jax.Array          # [B, U, K] final per-unique-token count splits
     n_dk: jax.Array       # [B, K] final doc-topic counts
     theta: jax.Array      # [B, K] posterior-mean topic proportions
 
@@ -145,6 +186,69 @@ def gibbs_sweeps_dense(beta_w: jax.Array, maskf: jax.Array,
     return per_pos, z, ndk_acc / n_keep
 
 
+def gibbs_sweeps_sparse(beta_w: jax.Array, countf: jax.Array,
+                        uniforms: jax.Array, z0: jax.Array, *,
+                        alpha: float, n_sweeps: int, burnin: int,
+                        rao_blackwell: bool = True
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Count-weighted Gibbs sweeps over unique-token (CSR) documents.
+
+    beta_w [B, U, K] likelihood rows per unique word, countf [B, U] float
+    counts (0.0 on padding slots), uniforms [S, B, U], z0 [B, U] i32.
+    Returns (per_unique [B, U, K], m [B, U, K], ndk_mean [B, K]).
+
+    Topic state is the count split m[b, u] = c * one_hot(z_u): all ``c``
+    copies of a unique word share one topic and are moved together by a
+    single count-weighted categorical draw — remove the whole split from
+    n_dk, draw z from (n_dk + alpha) * beta[:, w], add c * one_hot(z)
+    back. O(U) draws per sweep instead of O(L). ``per_unique`` is the
+    mean over kept sweeps of ``c *`` the Rao-Blackwellized conditional
+    (or of the sampled split with rao_blackwell=False), i.e. the token
+    mass is folded in: scatter it with :func:`stats_from_unique` as-is.
+
+    With all counts in {0, 1} every op matches :func:`gibbs_sweeps_dense`
+    on the (sorted) dense document bitwise — same uniform consumption,
+    same add/remove order; with counts > 1 the blocked move is a
+    different (faster-mixing per draw, statistically validated) kernel
+    than c successive per-copy moves (tests/test_sparse.py).
+    """
+    b, u_dim, k = beta_w.shape
+    n_keep = n_sweeps - burnin
+    m0 = countf[..., None] * _one_hot(z0, k, beta_w.dtype)
+    n_dk0 = jnp.einsum("buk,bu->bk", _one_hot(z0, k, beta_w.dtype), countf)
+
+    def slot(i, carry, s):
+        m, n_dk, acc = carry
+        c = countf[:, i]                                       # [B]
+        n_dk = n_dk - m[:, i]
+        probs = (n_dk + alpha) * beta_w[:, i]                  # [B, K]
+        new_z = sample_from_unnormalized(probs, uniforms[s, :, i])
+        new_m = c[:, None] * _one_hot(new_z, k, n_dk.dtype)
+        n_dk = n_dk + new_m
+        post = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+        collect = jnp.asarray(s >= burnin, post.dtype)
+        contrib = post if rao_blackwell else _one_hot(new_z, k, post.dtype)
+        acc = acc.at[:, i].add(collect * c[:, None] * contrib)
+        m = m.at[:, i].set(new_m)
+        return m, n_dk, acc
+
+    def sweep(carry, s):
+        m, n_dk, acc, ndk_acc = carry
+        m, n_dk, acc = jax.lax.fori_loop(
+            0, u_dim, lambda i, cc: slot(i, cc, s), (m, n_dk, acc))
+        keep = jnp.asarray(s >= burnin, n_dk.dtype)
+        return (m, n_dk, acc, ndk_acc + keep * n_dk), None
+
+    acc0 = jnp.zeros((b, u_dim, k), beta_w.dtype)
+    ndk0 = jnp.zeros((b, k), beta_w.dtype)
+    (m, _n_dk, acc, ndk_acc), _ = jax.lax.scan(
+        sweep, (m0, n_dk0, acc0, ndk0), jnp.arange(n_sweeps))
+
+    slotf = (countf > 0).astype(beta_w.dtype)
+    per_unique = acc / n_keep * slotf[..., None]
+    return per_unique, m, ndk_acc / n_keep
+
+
 # ----------------------------------------------------------------------------
 # Front-end pieces shared by both backends and by the fused batch path
 # ----------------------------------------------------------------------------
@@ -216,6 +320,82 @@ def beta_w_from_stats(stats: jax.Array, words: jax.Array,
     denom = (stats + tau).sum(-1)                         # [K]
     cols = jnp.moveaxis(stats[:, words], 0, -1)           # [B, L, K]
     return (cols + tau) / denom
+
+
+# ----------------------------------------------------------------------------
+# Unique-token (CSR) corpus layout
+# ----------------------------------------------------------------------------
+
+def dense_to_unique(words: jax.Array, mask: jax.Array,
+                    max_unique: int | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Dense [..., L] token lists -> per-doc (word_id, count) pairs [..., U].
+
+    The jit-able sort+segment pass of the sparse corpus layer: sort each
+    document's unmasked tokens (masked positions to a sentinel past the
+    vocabulary), mark segment heads where the sorted value changes, and
+    scatter segment lengths into U = ``max_unique`` padded slots (default
+    U = L, always sufficient). Returns (uw [..., U] int32 ascending
+    unique word ids, counts [..., U] int32 multiplicities); padding slots
+    are (0, 0). Documents with more than ``max_unique`` distinct words
+    silently drop the overflow — callers that can run host-side should
+    use :func:`unique_view`, which trims U to the realized maximum.
+
+    Pure function of (words, mask): corpora stay bit-identical by seed,
+    the view is derived, never generated.
+    """
+    lead, l = words.shape[:-1], words.shape[-1]
+    u_dim = l if max_unique is None else int(max_unique)
+    w2 = words.reshape(-1, l).astype(jnp.int32)
+    m2 = mask.reshape(-1, l).astype(bool)
+    b = w2.shape[0]
+    sentinel = jnp.iinfo(jnp.int32).max
+    sw = jnp.sort(jnp.where(m2, w2, sentinel), axis=-1)
+    valid = sw != sentinel
+    first = valid & jnp.concatenate(
+        [jnp.ones((b, 1), bool), sw[:, 1:] != sw[:, :-1]], axis=-1)
+    seg = jnp.cumsum(first, axis=-1) - 1                  # [B, L]
+    # padding / overflow tokens land in a throwaway slot u_dim
+    seg = jnp.where(valid & (seg < u_dim), seg, u_dim)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((b, u_dim + 1), jnp.int32).at[rows, seg].add(
+        valid.astype(jnp.int32))
+    uw = jnp.zeros((b, u_dim + 1), jnp.int32).at[rows, seg].max(
+        jnp.where(valid, sw, 0))
+    return (uw[:, :u_dim].reshape(lead + (u_dim,)),
+            counts[:, :u_dim].reshape(lead + (u_dim,)))
+
+
+def unique_view(words: jax.Array, mask: jax.Array,
+                max_unique: int | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Host-facing :func:`dense_to_unique` trimmed to the realized U.
+
+    Computes the actual maximum unique-token count across documents (a
+    host sync — not for use inside jit) and slices the padded view down
+    to it, so downstream sweeps do O(realized U) work, not O(L).
+    """
+    uw, counts = dense_to_unique(words, mask, max_unique)
+    u_true = max(int((counts > 0).sum(-1).max()), 1)
+    return uw[..., :u_true], counts[..., :u_true]
+
+
+def stats_from_unique(uw: jax.Array, per_unique: jax.Array,
+                      vocab_size: int,
+                      countf: jax.Array | None = None) -> jax.Array:
+    """Segmented scatter: [B, U, K] per-unique-token stats into [K, V].
+
+    The CSR counterpart of :func:`stats_from_per_pos` — ``per_unique``
+    rows already carry the full token mass of their slot (``count x`` the
+    per-copy conditional, as produced by :func:`gibbs_sweeps_sparse`), so
+    the scatter-add machinery is IDENTICAL: given equal per-token mass
+    the dense and unique paths produce the same bits
+    (tests/test_sparse.py). ``countf`` [B, U] float counts set the
+    per-document-mean denominator to the non-empty-document count (a doc
+    is non-empty iff it has any positive count) — the same rule as the
+    dense path's ``maskf``.
+    """
+    return stats_from_per_pos(uw, per_unique, vocab_size, countf)
 
 
 # ----------------------------------------------------------------------------
@@ -309,6 +489,98 @@ def get_estep(name: str, **kwargs) -> _EStepBase:
 
 
 # ----------------------------------------------------------------------------
+# Sparse (unique-token) EStep backends — same registry split, CSR layout
+# ----------------------------------------------------------------------------
+
+class _SparseEStepBase:
+    """Front-end for the CSR layout: PRNG stream + segmented scatter
+    around .sweeps(). Uniforms/z0 are drawn per unique SLOT ([S, B, U] /
+    [B, U]) from the same two-way key split as the dense path."""
+
+    def __call__(self, config: LDAConfig, key: jax.Array, uw: jax.Array,
+                 counts: jax.Array, beta: jax.Array,
+                 rao_blackwell: bool = True) -> SparseGibbsResult:
+        """Full E-step on a batch of unique-token documents.
+
+        uw: [B, U] int32 unique word ids, counts: [B, U] multiplicities
+        (0 = padding), beta: [K, V]. Returns SparseGibbsResult with
+        stats = the same per-document-mean [K, V] statistic as the dense
+        E-step computes from the expanded documents.
+        """
+        b, u_dim = uw.shape
+        countf = counts.astype(beta.dtype)
+        uniforms, z0 = draw_gibbs_randoms(config, key, b, u_dim,
+                                          beta.dtype)
+        beta_w = jnp.take(beta.T, uw, axis=0)               # [B, U, K]
+        per_unique, m, ndk_mean = self.sweeps(
+            beta_w, countf, uniforms, z0, alpha=config.alpha,
+            n_sweeps=config.n_gibbs, burnin=config.n_gibbs_burnin,
+            rao_blackwell=rao_blackwell)
+        stats = stats_from_unique(uw, per_unique, config.vocab_size,
+                                  countf)
+        theta = ndk_mean + config.alpha
+        theta = theta / theta.sum(-1, keepdims=True)
+        return SparseGibbsResult(stats=stats, m=m, n_dk=m.sum(axis=1),
+                                 theta=theta)
+
+
+class DenseSparseEStep(_SparseEStepBase):
+    """Pure-jnp count-weighted sweeps: the sparse path's oracle."""
+
+    name = "dense"
+
+    def sweeps(self, beta_w, countf, uniforms, z0, *, alpha, n_sweeps,
+               burnin, rao_blackwell=True):
+        return gibbs_sweeps_sparse(beta_w, countf, uniforms, z0,
+                                   alpha=alpha, n_sweeps=n_sweeps,
+                                   burnin=burnin,
+                                   rao_blackwell=rao_blackwell)
+
+
+class PallasSparseEStep(_SparseEStepBase):
+    """The kernels/lda_sparse TPU kernel (grid over doc blocks, the
+    count-split segment state resident in VMEM). ``interpret=None``
+    auto-detects like every other kernel backend; Rao-Blackwellized only,
+    with the same warn-and-fall-back for ``rao_blackwell=False``."""
+
+    name = "pallas"
+
+    def __init__(self, block_docs: int = 8, interpret: bool | None = None):
+        self.block_docs = block_docs
+        self.interpret = interpret
+
+    def sweeps(self, beta_w, countf, uniforms, z0, *, alpha, n_sweeps,
+               burnin, rao_blackwell=True):
+        if not rao_blackwell:
+            warnings.warn(
+                "the lda_sparse kernel is Rao-Blackwellized only; "
+                "falling back to the dense sparse E-step for "
+                "rao_blackwell=False", stacklevel=2)
+            return gibbs_sweeps_sparse(beta_w, countf, uniforms, z0,
+                                       alpha=alpha, n_sweeps=n_sweeps,
+                                       burnin=burnin, rao_blackwell=False)
+        from repro.kernels.lda_sparse import ops as lda_sparse_ops
+        return lda_sparse_ops.sparse_sweeps(
+            beta_w, countf, uniforms, z0, alpha=alpha, n_sweeps=n_sweeps,
+            burnin=burnin, block_docs=self.block_docs,
+            interpret=self.interpret)
+
+
+SPARSE_ESTEP_BACKENDS = ("dense", "pallas")
+
+
+def get_sparse_estep(name: str, **kwargs) -> _SparseEStepBase:
+    """Factory for the CSR layout: 'dense' | 'pallas' (same names as the
+    dense registry, so ``DeledaConfig.estep_backend`` selects both)."""
+    if name == "dense":
+        return DenseSparseEStep(**kwargs)
+    if name == "pallas":
+        return PallasSparseEStep(**kwargs)
+    raise ValueError(f"unknown sparse E-step backend {name!r}; "
+                     f"want dense | pallas")
+
+
+# ----------------------------------------------------------------------------
 # Fused multi-node batch path
 # ----------------------------------------------------------------------------
 
@@ -388,3 +660,55 @@ def estep_batch_from_stats(backend: _EStepBase, config: LDAConfig,
     return jax.vmap(
         lambda w, p, m: stats_from_per_pos(w, p, config.vocab_size, m))(
             words, per_pos, maskf)
+
+
+def fused_sweeps_sparse(backend: _SparseEStepBase, config: LDAConfig,
+                        keys: jax.Array, beta_w: jax.Array,
+                        countf: jax.Array,
+                        rao_blackwell: bool = True) -> jax.Array:
+    """CSR twin of :func:`fused_sweeps`: A nodes as ONE [A*B, U] call.
+
+    keys [A] per-node PRNG streams, beta_w [A, B, U, K] likelihood rows
+    per unique word, countf [A, B, U] float counts. Returns per-unique
+    statistics [A, B, U, K] (token mass folded in). The same batch-
+    composition-independence argument applies: every sweep op is
+    elementwise or a last-axis reduction, so fusing nodes changes no
+    bits.
+    """
+    a, b, u_dim, k = beta_w.shape
+    s = config.n_gibbs
+    uniforms, z0 = jax.vmap(
+        lambda kk: draw_gibbs_randoms(config, kk, b, u_dim,
+                                      beta_w.dtype))(keys)
+    per_unique, _m, _ndk = backend.sweeps(
+        beta_w.reshape(a * b, u_dim, k),
+        countf.reshape(a * b, u_dim),
+        jnp.moveaxis(uniforms, 0, 1).reshape(s, a * b, u_dim),
+        z0.reshape(a * b, u_dim),
+        alpha=config.alpha, n_sweeps=s, burnin=config.n_gibbs_burnin,
+        rao_blackwell=rao_blackwell)
+    return per_unique.reshape(a, b, u_dim, k)
+
+
+def estep_batch_from_stats_unique(backend: _SparseEStepBase,
+                                  config: LDAConfig, keys: jax.Array,
+                                  uw: jax.Array, counts: jax.Array,
+                                  stats: jax.Array,
+                                  rao_blackwell: bool = True) -> jax.Array:
+    """Fused CSR E-steps reading beta straight from the statistic.
+
+    The unique-layout twin of :func:`estep_batch_from_stats`: uw/counts
+    [A, B, U] per-node minibatches in the (word_id, count) layout, stats
+    [A, K, V] or vocab-sharded [A, K, S, V/S]. The blocked
+    ``beta_w_from_stats`` gather now touches only O(A*B*U*K) columns —
+    the sparse layer's win compounds with the Scale layer's — and the
+    segmented scatter assembles per-node [A, K, V] statistics back out.
+    """
+    beta_w = jax.vmap(
+        lambda st, w: beta_w_from_stats(st, w, config.tau))(stats, uw)
+    countf = counts.astype(beta_w.dtype)
+    per_unique = fused_sweeps_sparse(backend, config, keys, beta_w,
+                                     countf, rao_blackwell=rao_blackwell)
+    return jax.vmap(
+        lambda w, p, c: stats_from_unique(w, p, config.vocab_size, c))(
+            uw, per_unique, countf)

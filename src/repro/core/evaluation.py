@@ -61,7 +61,8 @@ import jax.numpy as jnp
 from repro.core import estep as estep_mod
 
 __all__ = [
-    "EvalSpec", "left_to_right_from_beta_w", "left_to_right_log_likelihood",
+    "EvalSpec", "left_to_right_from_beta_w",
+    "left_to_right_unique_from_beta_w", "left_to_right_log_likelihood",
     "evaluate_heldout", "heldout_lp_from_stats", "log_perplexity",
     "log_perplexity_from_stats", "relative_perplexity_error",
 ]
@@ -83,11 +84,14 @@ class EvalSpec:
     key: jax.Array
     n_particles: int = 10
     probe_nodes: int = 3
+    layout: str = "dense"    # "dense" | "unique": run the in-loop
+                             # evaluator over per-position tokens or over
+                             # (word_id, count) pairs (Sparse corpus layer)
 
 
 jax.tree_util.register_dataclass(
     EvalSpec, data_fields=["words", "mask", "key"],
-    meta_fields=["n_particles", "probe_nodes"])
+    meta_fields=["n_particles", "probe_nodes", "layout"])
 
 
 def _doc_keys(key: jax.Array, doc_ids: jax.Array) -> jax.Array:
@@ -166,6 +170,93 @@ def left_to_right_from_beta_w(key: jax.Array, doc_ids: jax.Array,
     return log_ps.sum(axis=0)                                  # [B]
 
 
+def left_to_right_unique_from_beta_w(key: jax.Array, doc_ids: jax.Array,
+                                     beta_w: jax.Array, counts: jax.Array,
+                                     alpha: float,
+                                     n_particles: int = 10) -> jax.Array:
+    """[B] per-document LL estimates over the unique-token (CSR) layout.
+
+    beta_w [B, U, K] likelihood rows per unique word, counts [B, U] int32
+    multiplicities (0 = padding slot). The count-weighted twin of
+    :func:`left_to_right_from_beta_w`: the position scan runs over the U
+    unique slots, the earlier-slot resample moves all c copies of a word
+    with one draw (``gibbs_position_update`` with ``mf = c``) and slot n
+    contributes ``c * log p(w_n | z_<n)``.
+
+    With every count in {0, 1} this is BITWISE the dense estimator run on
+    the (sorted) expanded document — same streams, same op order, 1.0*x
+    multiplies only (tests/test_sparse.py). With duplicates it is the
+    blocked approximation of Wallach et al.'s algorithm 3: a word's c
+    copies are scored against the predictive theta from before the block
+    and resampled as one unit, instead of position-by-position — the same
+    blocked-move approximation the sparse training sweeps make, traded
+    for O(U) instead of O(L) scan steps.
+    """
+    b, u_dim, k_dim = beta_w.shape
+    p = n_particles
+    countf = counts.astype(beta_w.dtype)
+    alpha_sum = alpha * k_dim
+    keys_d = _doc_keys(key, doc_ids)                          # [B]
+
+    def position(carry, n_idx):
+        z, n_k = carry
+        def draws(kd):
+            k_rs, k_dr = jax.random.split(jax.random.fold_in(kd, n_idx))
+            return (jax.random.uniform(k_rs, (p, u_dim)),
+                    jax.random.uniform(k_dr, (p,)))
+        u_rs_n, u_dr_n = jax.vmap(draws)(keys_d)    # [B, P, U], [B, P]
+        # earlier slots keep their full token mass in play
+        pos_countf = jnp.where(jnp.arange(u_dim)[None, :] < n_idx,
+                               countf, 0.0)
+
+        def resample(i, st):
+            z, n_k = st
+            new_z, n_k, _post = estep_mod.gibbs_position_update(
+                n_k, z[:, :, i], beta_w[:, None, i, :],
+                pos_countf[:, i][:, None], u_rs_n[:, :, i], alpha)
+            z = z.at[:, :, i].set(new_z)
+            return z, n_k
+
+        z, n_k = jax.lax.fori_loop(0, u_dim, resample, (z, n_k))
+
+        bw_n = beta_w[:, n_idx, :]                             # [B, K]
+        n_lt = n_k.sum(-1, keepdims=True)                      # [B, P, 1]
+        theta_hat = (n_k + alpha) / (n_lt + alpha_sum)         # [B, P, K]
+        p_w = (theta_hat * bw_n[:, None, :]).sum(-1)           # [B, P]
+        log_p = countf[:, n_idx] * jnp.log(
+            jnp.maximum(p_w.mean(axis=1), 1e-30))              # [B]
+        log_p = jnp.where(counts[:, n_idx] > 0, log_p, 0.0)
+
+        probs_n = (n_k + alpha) * bw_n[:, None, :]             # [B, P, K]
+        z_n = estep_mod.sample_from_unnormalized(probs_n, u_dr_n)
+        add = countf[:, n_idx][:, None, None]                  # [B, 1, 1]
+        n_k = n_k + add * jax.nn.one_hot(z_n, k_dim, dtype=n_k.dtype)
+        z = z.at[:, :, n_idx].set(
+            jnp.where((counts[:, n_idx] > 0)[:, None], z_n,
+                      z[:, :, n_idx]))
+        return (z, n_k), log_p
+
+    z0 = jnp.zeros((b, p, u_dim), jnp.int32)
+    nk0 = jnp.zeros((b, p, k_dim), beta_w.dtype)
+    (_, _), log_ps = jax.lax.scan(position, (z0, nk0),
+                                  jnp.arange(u_dim))
+    return log_ps.sum(axis=0)                                  # [B]
+
+
+def _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
+                    layout):
+    """Layout dispatch shared by the chunked and in-loop evaluators.
+
+    In the "unique" layout ``mask`` carries the [B, U] int32 counts."""
+    if layout == "unique":
+        return left_to_right_unique_from_beta_w(key, doc_ids, beta_w,
+                                                mask, alpha, n_particles)
+    if layout != "dense":
+        raise ValueError(f"layout must be dense|unique, got {layout!r}")
+    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
+                                     n_particles)
+
+
 @partial(jax.jit, static_argnames=("n_particles",))
 def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
                                  mask: jax.Array, beta: jax.Array,
@@ -188,27 +279,28 @@ def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
                                      n_particles)
 
 
-@partial(jax.jit, static_argnames=("n_particles",))
+@partial(jax.jit, static_argnames=("n_particles", "layout"))
 def _chunk_ll_from_stats(key, doc_ids, words, mask, stats, tau, alpha,
-                         n_particles):
+                         n_particles, layout="dense"):
     beta_w = estep_mod.beta_w_from_stats(stats, words, tau)
-    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
-                                     n_particles)
+    return _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
+                           layout)
 
 
-@partial(jax.jit, static_argnames=("n_particles",))
+@partial(jax.jit, static_argnames=("n_particles", "layout"))
 def _chunk_ll_from_beta(key, doc_ids, words, mask, beta, alpha,
-                        n_particles):
+                        n_particles, layout="dense"):
     beta_w = jnp.take(beta.T, words, axis=0)
-    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
-                                     n_particles)
+    return _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
+                           layout)
 
 
 def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
                      beta: jax.Array | None = None,
                      stats: jax.Array | None = None, tau: float = 1e-2,
                      alpha: float, n_particles: int = 10,
-                     chunk_docs: int | None = None) -> jax.Array:
+                     chunk_docs: int | None = None,
+                     layout: str = "dense") -> jax.Array:
     """Streaming per-document held-out log-likelihoods, [B].
 
     Pass exactly one of ``beta=`` (dense [K, V] topic matrix) or
@@ -223,9 +315,21 @@ def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
     result is bitwise-identical for every chunking (including C=B and
     C=1). The last chunk is padded with empty (fully masked) documents,
     which contribute log p = 0 and are sliced off.
+
+    ``layout="unique"`` (the Sparse corpus layer) converts the documents
+    to the (word_id, count) view once up front and runs the
+    count-weighted left-to-right scan over U unique slots instead of L
+    positions (:func:`left_to_right_unique_from_beta_w`) — exact for
+    duplicate-free documents, the blocked approximation otherwise.
     """
     if (beta is None) == (stats is None):
         raise ValueError("pass exactly ONE of beta= or stats=")
+    if layout not in ("dense", "unique"):
+        raise ValueError(f"layout must be dense|unique, got {layout!r}")
+    if layout == "unique":
+        # `mask` carries the int32 counts from here on; zero-count pad
+        # slots behave exactly like masked positions
+        words, mask = estep_mod.unique_view(words, mask)
     b, l = words.shape
     c = b if chunk_docs is None else max(1, min(int(chunk_docs), b))
     n_chunks = -(-b // c)
@@ -233,7 +337,8 @@ def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
         pad = n_chunks * c - b
         words = jnp.concatenate(
             [words, jnp.zeros((pad, l), words.dtype)])
-        mask = jnp.concatenate([mask, jnp.zeros((pad, l), bool)])
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((pad, l), mask.dtype)])
     doc_ids = jnp.arange(n_chunks * c, dtype=jnp.int32)
     lls = []
     for ci in range(n_chunks):
@@ -241,11 +346,11 @@ def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
         if stats is not None:
             lls.append(_chunk_ll_from_stats(
                 key, doc_ids[sl], words[sl], mask[sl], stats, tau, alpha,
-                n_particles))
+                n_particles, layout))
         else:
             lls.append(_chunk_ll_from_beta(
                 key, doc_ids[sl], words[sl], mask[sl], beta, alpha,
-                n_particles))
+                n_particles, layout))
     return jnp.concatenate(lls)[:b]
 
 
@@ -261,18 +366,22 @@ def _lp_mean(ll: jax.Array, mask: jax.Array) -> jax.Array:
 
 def heldout_lp_from_stats(key: jax.Array, words: jax.Array,
                           mask: jax.Array, stats: jax.Array, tau: float,
-                          alpha: float, n_particles: int = 10) -> jax.Array:
+                          alpha: float, n_particles: int = 10,
+                          layout: str = "dense") -> jax.Array:
     """Scalar LP straight from a (possibly vocab-sharded) statistic.
 
     Pure traced function — this is the in-loop evaluator that rides
     ``run_deleda``'s training scan (vmapped over probe nodes) and the
     per-chunk body of :func:`log_perplexity_from_stats`. Consumes stats
-    [K, V] or [K, S, V/S] through the blocked beta gather.
+    [K, V] or [K, S, V/S] through the blocked beta gather. With
+    ``layout="unique"``, ``words``/``mask`` must already be the
+    (word_id, count) pair view — the caller converts once, outside any
+    scan (``EvalSpec.layout`` in run_deleda does this).
     """
     doc_ids = jnp.arange(words.shape[0], dtype=jnp.int32)
     beta_w = estep_mod.beta_w_from_stats(stats, words, tau)
-    ll = left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
-                                   n_particles)
+    ll = _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
+                         layout)
     return _lp_mean(ll, mask)
 
 
@@ -290,11 +399,12 @@ def log_perplexity_from_stats(key: jax.Array, words: jax.Array,
                               mask: jax.Array, stats: jax.Array, *,
                               tau: float = 1e-2, alpha: float,
                               n_particles: int = 10,
-                              chunk_docs: int | None = None) -> jax.Array:
+                              chunk_docs: int | None = None,
+                              layout: str = "dense") -> jax.Array:
     """Scalar LP via the streaming evaluator (chunked, blocked-stats)."""
     ll = evaluate_heldout(key, words, mask, stats=stats, tau=tau,
                           alpha=alpha, n_particles=n_particles,
-                          chunk_docs=chunk_docs)
+                          chunk_docs=chunk_docs, layout=layout)
     return _lp_mean(ll, mask)
 
 

@@ -1,0 +1,5 @@
+"""Pallas TPU kernel for the unique-token (CSR) count-weighted E-step."""
+
+from repro.kernels.lda_sparse.ops import sparse_sweeps
+
+__all__ = ["sparse_sweeps"]

@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: count-weighted Gibbs sweeps over unique-token docs.
+
+The sparse corpus layer's hot loop. A document arrives as (word_id, count)
+pairs padded to U slots (U = max unique tokens, typically L/4 .. L/10 on
+Zipf-shaped corpora), and the per-slot move resamples ALL c copies of a
+word with one count-weighted categorical draw
+
+    p(z_u = k | z_-u, w) ~ (n_dk^{(-u)} + alpha) * beta[k, w_u],
+    m_u <- c * one_hot(z_u),
+
+so a sweep costs O(U) draws instead of the dense kernel's O(L). TPU
+adaptation mirrors kernels/lda_gibbs:
+
+  * the word->topic-row gather beta[:, w_u] is hoisted OUT of the kernel
+    (ops.py precomputes beta_w = beta.T[uw], shape [B, U, K]);
+  * randomness is pre-drawn as uniforms [S, B, U]; the kernel is
+    deterministic and bit-exact against the pure-jnp oracle (ref.py =
+    core.estep.gibbs_sweeps_sparse);
+  * the grid is 1-D over document blocks; each step keeps the whole
+    segment state on-chip: the [B_blk, U, K] count splits m (the
+    segmented representation of this block's token->topic assignment),
+    the likelihood rows, uniforms and the count-weighted Rao-Blackwell
+    accumulator all live in VMEM — only the final per-unique statistics
+    leave the chip, and the [K, V] scatter-add of those count-weighted
+    rows (``estep.stats_from_unique``) runs as a single XLA scatter where
+    the per-node assembly lives.
+
+Padding slots carry count 0: their draws still consume a uniform (keeping
+the stream layout rectangular) but add zero mass everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _one_hot(z: jax.Array, k: int, dtype) -> jax.Array:
+    """[..., ] int32 -> [..., k] one-hot (iota+compare; MXU-free)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (*z.shape, k), len(z.shape))
+    return (z[..., None] == iota).astype(dtype)
+
+
+def _sample_cat(probs: jax.Array, u: jax.Array) -> jax.Array:
+    """Inverse-CDF draw from unnormalized probs [B, K] with u [B]."""
+    cum = jnp.cumsum(probs, axis=-1)
+    return jnp.sum(cum < u[:, None] * cum[:, -1:], axis=-1).astype(jnp.int32)
+
+
+def sparse_block_kernel(beta_w_ref, count_ref, u_ref, z0_ref,
+                        per_unique_ref, m_ref, ndk_ref,
+                        *, alpha: float, n_sweeps: int, burnin: int):
+    """One grid step: all count-weighted sweeps for a [B_blk] doc block.
+
+    beta_w_ref:    [B_blk, U, K] f32  per-unique-word likelihood rows
+    count_ref:     [B_blk, U]    f32  token multiplicities (0 = padding)
+    u_ref:         [S, B_blk, U] f32  pre-drawn uniforms
+    z0_ref:        [B_blk, U]    i32  initial topic assignments
+    per_unique_ref:[B_blk, U, K] f32  OUT count-weighted mean RB posterior
+    m_ref:         [B_blk, U, K] f32  OUT final count splits
+    ndk_ref:       [B_blk, K]    f32  OUT mean doc-topic counts (kept)
+    """
+    beta_w = beta_w_ref[...]
+    countf = count_ref[...]
+    z0 = z0_ref[...]
+    b_blk, u_dim, k = beta_w.shape
+    n_keep = n_sweeps - burnin
+
+    m0 = countf[..., None] * _one_hot(z0, k, beta_w.dtype)
+    n_dk0 = jnp.sum(m0, axis=1)
+
+    def slot(i, carry, *, s):
+        m, n_dk, acc = carry
+        c = jax.lax.dynamic_slice_in_dim(countf, i, 1, axis=1)[:, 0]  # [B]
+        m_i = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=1)[:, 0]   # [B,K]
+        bw = jax.lax.dynamic_slice_in_dim(beta_w, i, 1, axis=1)[:, 0]
+        u = jax.lax.dynamic_slice_in_dim(
+            jax.lax.dynamic_slice_in_dim(u_ref[...], s, 1, axis=0)[0],
+            i, 1, axis=1)[:, 0]                                       # [B]
+
+        n_dk = n_dk - m_i
+        probs = (n_dk + alpha) * bw                                 # [B,K]
+        new_z = _sample_cat(probs, u)
+        new_m = c[:, None] * _one_hot(new_z, k, n_dk.dtype)
+        n_dk = n_dk + new_m
+
+        post = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+        collect = jnp.asarray(s >= burnin, post.dtype)
+        acc = jax.lax.dynamic_update_slice_in_dim(
+            acc,
+            (jax.lax.dynamic_slice_in_dim(acc, i, 1, axis=1)[:, 0]
+             + collect * c[:, None] * post)[:, None, :],
+            i, axis=1)
+        m = jax.lax.dynamic_update_slice_in_dim(
+            m, new_m[:, None, :], i, axis=1)
+        return m, n_dk, acc
+
+    def sweep(s, carry):
+        m, n_dk, acc, ndk_acc = carry
+        m, n_dk, acc = jax.lax.fori_loop(
+            0, u_dim, functools.partial(slot, s=s), (m, n_dk, acc))
+        keep = jnp.asarray(s >= burnin, n_dk.dtype)
+        return m, n_dk, acc, ndk_acc + keep * n_dk
+
+    acc0 = jnp.zeros((b_blk, u_dim, k), beta_w.dtype)
+    ndk_acc0 = jnp.zeros((b_blk, k), beta_w.dtype)
+
+    m, n_dk, acc, ndk_acc = jax.lax.fori_loop(
+        0, n_sweeps, sweep, (m0, n_dk0, acc0, ndk_acc0))
+
+    slotf = (countf > 0).astype(beta_w.dtype)
+    per_unique_ref[...] = acc / n_keep * slotf[..., None]
+    m_ref[...] = m
+    ndk_ref[...] = ndk_acc / n_keep
+
+
+def sparse_sweeps_pallas(beta_w: jax.Array, countf: jax.Array,
+                         uniforms: jax.Array, z0: jax.Array, *,
+                         alpha: float, n_sweeps: int, burnin: int,
+                         block_docs: int = 8, interpret: bool = True
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """pallas_call wrapper. beta_w [B,U,K]; B must divide by block_docs.
+
+    Returns (per_unique [B,U,K], m [B,U,K], ndk_mean [B,K]).
+    """
+    b, u_dim, k = beta_w.shape
+    s = uniforms.shape[0]
+    if b % block_docs:
+        raise ValueError(f"B={b} not divisible by block_docs={block_docs}")
+    grid = (b // block_docs,)
+
+    kernel = functools.partial(sparse_block_kernel, alpha=alpha,
+                               n_sweeps=n_sweeps, burnin=burnin)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_docs, u_dim, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_docs, u_dim), lambda i: (i, 0)),
+            pl.BlockSpec((s, block_docs, u_dim), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_docs, u_dim), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_docs, u_dim, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_docs, u_dim, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_docs, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, u_dim, k), beta_w.dtype),
+            jax.ShapeDtypeStruct((b, u_dim, k), beta_w.dtype),
+            jax.ShapeDtypeStruct((b, k), beta_w.dtype),
+        ],
+        interpret=interpret,
+    )(beta_w, countf, uniforms, z0)

@@ -1,0 +1,66 @@
+"""Public jit'd wrapper for the lda_sparse Pallas kernel.
+
+`sparse_sweeps` is the unique-token (CSR) counterpart of
+`kernels.lda_gibbs.ops.gibbs_sweeps`: same padding contract (any B, padded
+to a block_docs multiple — padded docs carry count 0 everywhere so they add
+no mass), same `interpret=None` auto-detect (compiled on TPU, interpreter
+elsewhere via kernels/common.resolve_interpret).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_interpret
+from repro.kernels.lda_sparse.lda_sparse import sparse_sweeps_pallas
+from repro.kernels.lda_sparse import ref as ref_mod
+
+
+def _pad_to(x: jax.Array, b_pad: int, axis: int, fill=0):
+    pad = b_pad - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@partial(jax.jit, static_argnames=("alpha", "n_sweeps", "burnin",
+                                   "block_docs", "interpret"))
+def sparse_sweeps(beta_w: jax.Array, countf: jax.Array, uniforms: jax.Array,
+                  z0: jax.Array, *, alpha: float, n_sweeps: int,
+                  burnin: int, block_docs: int = 8,
+                  interpret: bool | None = None):
+    """Padded pallas_call: accepts any B, pads to a block multiple.
+
+    beta_w [B, U, K], countf [B, U] f32 (0 = padding slot), uniforms
+    [S, B, U], z0 [B, U] i32. Returns (per_unique [B, U, K],
+    m [B, U, K], ndk_mean [B, K]).
+    """
+    b, u_dim, _k = beta_w.shape
+    if countf.shape != (b, u_dim) or z0.shape != (b, u_dim):
+        # the jnp oracle would silently broadcast e.g. a [1, U] countf;
+        # a pallas BlockSpec reads out of bounds instead (NaN garbage)
+        raise ValueError(
+            f"countf/z0 must be [{b}, {u_dim}] like beta_w[:, :, 0], got "
+            f"{countf.shape} / {z0.shape}")
+    b_pad = -(-b // block_docs) * block_docs
+    per_unique, m, ndk = sparse_sweeps_pallas(
+        _pad_to(beta_w, b_pad, 0),
+        _pad_to(countf, b_pad, 0),
+        _pad_to(uniforms, b_pad, 1, fill=0.5),
+        _pad_to(z0, b_pad, 0),
+        alpha=alpha, n_sweeps=n_sweeps, burnin=burnin,
+        block_docs=block_docs, interpret=resolve_interpret(interpret))
+    return per_unique[:b], m[:b], ndk[:b]
+
+
+def sparse_sweeps_reference(beta_w, countf, uniforms, z0, *, alpha,
+                            n_sweeps, burnin):
+    """Re-export of the oracle for the kernel tests."""
+    return ref_mod.sparse_sweeps_ref(beta_w, countf, uniforms, z0,
+                                     alpha=alpha, n_sweeps=n_sweeps,
+                                     burnin=burnin)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the lda_sparse Pallas kernel.
+
+Bit-compatible semantics: consumes the same pre-drawn uniforms and initial
+assignments, performs the same slot loop in the same order with the same
+float ops. As with lda_gibbs, the oracle IS the shared sweep core
+(`repro.core.estep.gibbs_sweeps_sparse`) — the kernel, the sparse training
+E-step and the unique-layout evaluator exercise ONE implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.estep import gibbs_sweeps_sparse
+
+
+def sparse_sweeps_ref(beta_w: jax.Array, countf: jax.Array,
+                      uniforms: jax.Array, z0: jax.Array, *,
+                      alpha: float, n_sweeps: int, burnin: int
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference count-weighted sweeps. Shapes as in sparse_block_kernel.
+
+    beta_w [B, U, K], countf [B, U] f32, uniforms [S, B, U], z0 [B, U] i32.
+    Returns (per_unique [B,U,K], m [B,U,K], ndk_mean [B,K]).
+    """
+    return gibbs_sweeps_sparse(beta_w, countf, uniforms, z0, alpha=alpha,
+                               n_sweeps=n_sweeps, burnin=burnin)

@@ -51,7 +51,8 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     scenario=None, alive: np.ndarray | None = None,
                     mesh_shape: tuple[int, int] | None = None,
                     eval_every: int = 0,
-                    eval_spec: evaluation.EvalSpec | None = None):
+                    eval_spec: evaluation.EvalSpec | None = None,
+                    corpus_layout: str = "dense"):
     """words/mask [n, D, L] node-sharded over the mesh "data" axis.
 
     Returns (stats [n, K, V], consensus trace, wall seconds) — plus, when
@@ -74,6 +75,16 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
     matrix is never materialized nor gathered. Documents are replicated
     over the vocab axis only (never across the node axis: the privacy
     placement is unchanged).
+
+    ``corpus_layout="unique"`` (the Sparse corpus layer) converts the
+    node shards host-side ONCE to the per-document (word_id, count) view
+    trimmed to the realized U (`estep.unique_view`) and runs each
+    device's fused E-step as count-weighted sweeps over U slots instead
+    of per-position sweeps over L tokens (`estep.fused_sweeps_sparse`).
+    The vocab-axis beta assembly and the per-shard scatter are layout-
+    oblivious: counts serve as the scatter mask (a document is non-empty
+    iff it has a positive count) and the per-unique rows already carry
+    their full token mass.
 
     Dynamic-network regimes: pass a `repro.core.scenario.Scenario` (its
     compiled schedule + churn mask replace `schedule`/`alive`; `graph` may
@@ -126,7 +137,17 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
     pair_up = alive & alive[rows, partners]
     partners = np.where(pair_up, partners, ids)
     rho_fn = make_rho_schedule("power")
-    estep = estep_mod.get_estep(estep_backend)
+    unique = corpus_layout == "unique"
+    if corpus_layout not in ("dense", "unique"):
+        raise ValueError(f"corpus_layout must be dense|unique, "
+                         f"got {corpus_layout!r}")
+    if unique:
+        estep = estep_mod.get_sparse_estep(estep_backend)
+        # host-side conversion, trimmed to the realized max unique count;
+        # from here `words` holds unique ids and `mask` the int32 counts
+        words, mask = estep_mod.unique_view(words, mask)
+    else:
+        estep = estep_mod.get_estep(estep_backend)
 
     node = P("data")
     stats_spec = P("data", None, vocab_axis) if vocab_axis else node
@@ -183,8 +204,15 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     st, ww, lda.tau))(stats, bw)
             scatter_w, v_scatter = bw, lda.vocab_size
             per_pos_mask = None
-        per_pos = estep_mod.fused_sweeps(estep, lda, k_gibbs, beta_w,
-                                         maskf)         # [n_local,B,L,K]
+        if unique:
+            # count-weighted sweeps over the U unique slots; the rows come
+            # back with their token mass folded in, so the shared scatter
+            # below needs no count reweighting (maskf IS the counts here)
+            per_pos = estep_mod.fused_sweeps_sparse(estep, lda, k_gibbs,
+                                                    beta_w, maskf)
+        else:
+            per_pos = estep_mod.fused_sweeps(estep, lda, k_gibbs, beta_w,
+                                             maskf)     # [n_local,B,L,K]
         if per_pos_mask is not None:
             # each vocab shard scatters only ITS words' contributions
             per_pos = jnp.where(per_pos_mask[..., None], per_pos, 0.0)
@@ -213,10 +241,16 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                 f"eval_every={eval_every} (the LP trajectory is "
                 f"[n_steps/eval_every, probe_nodes])")
         probe = min(eval_spec.probe_nodes, n)
+        if eval_spec.layout == "unique":
+            ew, em = estep_mod.unique_view(eval_spec.words,
+                                           eval_spec.mask)
+        else:
+            ew, em = eval_spec.words, eval_spec.mask
         eval_fn = jax.jit(jax.vmap(
             lambda st: evaluation.heldout_lp_from_stats(
-                eval_spec.key, eval_spec.words, eval_spec.mask, st,
-                lda.tau, lda.alpha, eval_spec.n_particles)))
+                eval_spec.key, ew, em, st,
+                lda.tau, lda.alpha, eval_spec.n_particles,
+                eval_spec.layout)))
 
     alive_dev = jnp.asarray(alive)
     stats = stats0
@@ -252,6 +286,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--estep-backend", default="dense",
                     choices=list(estep_mod.ESTEP_BACKENDS))
+    ap.add_argument("--corpus-layout", default="dense",
+                    choices=["dense", "unique"],
+                    help="dense per-position sweeps or the unique-token "
+                         "(CSR) count-weighted sweeps")
     ap.add_argument("--drop", type=float, default=0.0,
                     help="per-event gossip message drop probability")
     ap.add_argument("--churn", type=float, default=0.0,
@@ -295,7 +333,7 @@ def main(argv=None):
     stats, consensus, sec = run_mesh_deleda(
         lda, corpus.words, corpus.mask, graph, args.steps, args.batch,
         args.seed, estep_backend=args.estep_backend, scenario=scenario,
-        mesh_shape=mesh_shape)
+        mesh_shape=mesh_shape, corpus_layout=args.corpus_layout)
     d = float(beta_distance(eta_star(stats[0]), corpus.beta_star))
     print(f"{args.steps} steps in {sec:.1f}s | consensus {consensus} "
           f"| D(beta, beta*) node0 = {d:.4f}")

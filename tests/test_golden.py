@@ -41,6 +41,12 @@ SHARDS = 4
 # estimator's fold_in(key, doc_id)/fold_in(doc_key, position) stream is a
 # numeric contract — silent stream drift would un-pin every figure)
 EVAL_SHARDS = (1, SHARDS)
+# Sparse corpus layer: the unique-token (CSR) trajectory gets its own
+# pinned entries across comm x estep backends and a vocab-sharded one —
+# it is a DIFFERENT (count-weighted) chain, so it is pinned on its own,
+# not against the dense goldens
+SPARSE_COMBOS = COMBOS
+SPARSE_SHARDED = [("dense", "pallas")]
 
 
 def _fingerprint(trace: deleda.DeledaTrace) -> dict:
@@ -56,7 +62,8 @@ def _fingerprint(trace: deleda.DeledaTrace) -> dict:
 
 
 def _run(comm_backend: str, estep_backend: str, kind: str,
-         vocab_shards: int = 1, eval_every: int = 0):
+         vocab_shards: int = 1, eval_every: int = 0,
+         corpus_layout: str = "dense"):
     corpus = make_corpus(CFG, jax.random.key(0),
                          CorpusSpec(n_nodes=N, docs_per_node=4, n_test=4))
     g = watts_strogatz_graph(N, 4, 0.3, seed=0)
@@ -65,12 +72,14 @@ def _run(comm_backend: str, estep_backend: str, kind: str,
                               comm_backend=comm_backend,
                               estep_backend=estep_backend,
                               vocab_shards=vocab_shards,
-                              eval_every=eval_every)
+                              eval_every=eval_every,
+                              corpus_layout=corpus_layout)
     spec = None
     if eval_every:
         spec = evaluation.EvalSpec(
             words=corpus.test_words, mask=corpus.test_mask,
-            key=jax.random.key(7), n_particles=4, probe_nodes=2)
+            key=jax.random.key(7), n_particles=4, probe_nodes=2,
+            layout=corpus_layout)
     return deleda.run_deleda(cfg, jax.random.key(1), corpus.words,
                              corpus.mask, sched, degs, T, record_every=10,
                              eval_spec=spec)
@@ -104,6 +113,13 @@ def regen_if_requested():
             payload[f"eval:matching:dense:dense:vs{vs}"] = (
                 _eval_fingerprint(_run("dense", "dense", "matching",
                                        vocab_shards=vs, eval_every=10)))
+        for cb, eb in SPARSE_COMBOS:
+            payload[f"sparse:matching:{cb}:{eb}"] = _fingerprint(
+                _run(cb, eb, "matching", corpus_layout="unique"))
+        for cb, eb in SPARSE_SHARDED:
+            payload[f"sparse:matching:{cb}:{eb}:vs{SHARDS}"] = _fingerprint(
+                _run(cb, eb, "matching", vocab_shards=SHARDS,
+                     corpus_layout="unique"))
         with open(GOLDEN_PATH, "w") as f:
             json.dump(payload, f, indent=2)
     yield
@@ -166,6 +182,62 @@ def test_trace_matches_golden(kind, cb, eb):
     np.testing.assert_allclose(got["consensus_final"],
                                golden["consensus_final"], rtol=1e-3,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("cb,eb", SPARSE_COMBOS)
+def test_sparse_trace_matches_golden(cb, eb):
+    """The unique-token (CSR) trajectory is pinned per backend combo.
+    The count-weighted chain is a different sampler than the dense one,
+    so these entries stand on their own; cross-layout agreement is
+    gated statistically in tests/test_sparse.py and the sparse bench."""
+    key = f"sparse:matching:{cb}:{eb}"
+    golden = _golden()
+    if key not in golden:
+        pytest.skip(f"{key} not in goldens; refresh with GOLDEN_REGEN=1")
+    got = _fingerprint(_run(cb, eb, "matching", corpus_layout="unique"))
+    assert got["steps"] == golden[key]["steps"]
+    np.testing.assert_allclose(got["mass"], golden[key]["mass"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(got["sumsq"], golden[key]["sumsq"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(got["probe"], golden[key]["probe"],
+                               rtol=3e-3, atol=1e-5)
+    np.testing.assert_allclose(got["consensus_final"],
+                               golden[key]["consensus_final"], rtol=1e-3,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("cb,eb", SPARSE_SHARDED)
+def test_sparse_sharded_trace_matches_golden(cb, eb):
+    """Vocab-sharded CSR carry rides the same pinned sparse trajectory."""
+    key = f"sparse:matching:{cb}:{eb}:vs{SHARDS}"
+    golden = _golden()
+    if key not in golden:
+        pytest.skip(f"{key} not in goldens; refresh with GOLDEN_REGEN=1")
+    got = _fingerprint(_run(cb, eb, "matching", vocab_shards=SHARDS,
+                            corpus_layout="unique"))
+    assert got["steps"] == golden[key]["steps"]
+    np.testing.assert_allclose(got["mass"], golden[key]["mass"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(got["probe"], golden[key]["probe"],
+                               rtol=3e-3, atol=1e-5)
+    unsharded = golden[f"sparse:matching:{cb}:{eb}"]
+    np.testing.assert_allclose(got["mass"], unsharded["mass"], rtol=1e-4)
+    np.testing.assert_allclose(got["probe"], unsharded["probe"],
+                               rtol=3e-3, atol=1e-5)
+
+
+def test_sparse_backend_combos_agree_with_each_other():
+    """All comm x estep combos of the SAME unique-layout run agree to
+    float tolerance (the sparse registry contract)."""
+    ref = None
+    for cb, eb in SPARSE_COMBOS:
+        stats = np.asarray(_run(cb, eb, "matching",
+                                corpus_layout="unique").stats)
+        if ref is None:
+            ref = stats
+        else:
+            np.testing.assert_allclose(stats, ref, atol=2e-5)
 
 
 def test_backend_combos_agree_with_each_other():
