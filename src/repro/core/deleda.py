@@ -92,6 +92,11 @@ class DeledaConfig:
                                      # LP every this many steps (0 = off;
                                      # needs an EvalSpec, must be a
                                      # multiple of record_every)
+    eval_backend: str = "fused"      # left-to-right estimator backend:
+                                     # "fused" (multi-doc grid, the fast
+                                     # path), "serial" (reference), or
+                                     # "pallas" (kernels/lda_l2r); all
+                                     # bit-compatible per document
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
@@ -99,6 +104,10 @@ class DeledaConfig:
         if self.eval_every < 0:
             raise ValueError(f"eval_every must be >= 0, "
                              f"got {self.eval_every}")
+        if self.eval_backend not in eval_mod.EVAL_BACKENDS:
+            raise ValueError(
+                f"eval_backend must be one of {eval_mod.EVAL_BACKENDS}, "
+                f"got {self.eval_backend!r}")
         if self.vocab_shards < 1:
             raise ValueError(f"vocab_shards must be >= 1, "
                              f"got {self.vocab_shards}")
@@ -420,7 +429,7 @@ def run_deleda(config: DeledaConfig, key: jax.Array, words: jax.Array,
             lp = jax.vmap(lambda st: eval_mod.heldout_lp_from_stats(
                 spec.key, ew, em, st, config.lda.tau,
                 config.lda.alpha, spec.n_particles,
-                spec.layout))(stats[:probe])
+                spec.layout, config.eval_backend))(stats[:probe])
             return carry, (hist, cons, lp)
 
         xs = jax.tree_util.tree_map(

@@ -66,7 +66,7 @@ from repro.core.lda import LDAConfig
 
 __all__ = [
     "GibbsResult", "SparseGibbsResult", "sample_from_unnormalized",
-    "gibbs_position_update",
+    "sample_from_unnormalized_seq", "gibbs_position_update",
     "gibbs_sweeps_dense", "gibbs_sweeps_sparse", "draw_gibbs_randoms",
     "stats_from_per_pos", "stats_from_unique", "dense_to_unique",
     "unique_view",
@@ -115,6 +115,36 @@ def sample_from_unnormalized(probs: jax.Array, u: jax.Array) -> jax.Array:
     cum = jnp.cumsum(probs, axis=-1)
     return jnp.sum(cum < u[..., None] * cum[..., -1:], axis=-1).astype(
         jnp.int32)
+
+
+def sample_from_unnormalized_seq(probs: jax.Array,
+                                 u: jax.Array) -> jax.Array:
+    """Inverse-CDF draw with a FIXED sequential cumsum association.
+
+    Same draw as :func:`sample_from_unnormalized`, but the running sums
+    are built as ``((p0 + p1) + p2) + ...`` by explicit unrolled adds
+    instead of ``jnp.cumsum``. XLA lowers ``cumsum`` to a reduce-window
+    whose float-add association varies with shape and fusion context, so
+    two call sites computing "the same" cumsum can disagree in the last
+    ulp — which flips a ``cum < u * total`` comparison on measure-zero
+    ties. The unrolled form pins one association everywhere (XLA never
+    reassociates explicit float adds), making the fused evaluator, the
+    lda_l2r Pallas kernel and any future call site bit-identical to each
+    other by construction. K is a static trailing dim (unrolled K-1
+    adds + K compares — cheaper than reduce-window for the K <= 16 of
+    every LDA config here).
+    """
+    k = probs.shape[-1]
+    c = probs[..., 0]
+    cums = [c]
+    for j in range(1, k):
+        c = c + probs[..., j]
+        cums.append(c)
+    thresh = u * cums[-1]
+    z = jnp.zeros(probs.shape[:-1], jnp.int32)
+    for cj in cums:
+        z = z + (cj < thresh).astype(jnp.int32)
+    return z
 
 
 def gibbs_position_update(n_dk, zi, bw, mf, u, alpha):

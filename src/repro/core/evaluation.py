@@ -59,12 +59,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import estep as estep_mod
+from repro.core import threefry as tf3
 
 __all__ = [
-    "EvalSpec", "left_to_right_from_beta_w",
-    "left_to_right_unique_from_beta_w", "left_to_right_log_likelihood",
-    "evaluate_heldout", "heldout_lp_from_stats", "log_perplexity",
-    "log_perplexity_from_stats", "relative_perplexity_error",
+    "EvalSpec", "EVAL_BACKENDS", "left_to_right_from_beta_w",
+    "left_to_right_unique_from_beta_w", "left_to_right_fused",
+    "left_to_right_unique_fused", "left_to_right_log_likelihood",
+    "auto_chunk_docs", "evaluate_heldout", "heldout_lp_from_stats",
+    "log_perplexity", "log_perplexity_from_stats",
+    "relative_perplexity_error",
 ]
 
 
@@ -243,27 +246,196 @@ def left_to_right_unique_from_beta_w(key: jax.Array, doc_ids: jax.Array,
     return log_ps.sum(axis=0)                                  # [B]
 
 
+# ---------------------------------------------------------------------------
+# Fused multi-doc position grid (the fast path)
+# ---------------------------------------------------------------------------
+
+def _z_packing(n_particles: int, k_dim: int) -> tuple[int, int, int]:
+    """(bits per assignment, particles per uint32 word, words per doc).
+
+    The fused scan keeps the per-position assignments z packed into
+    uint32 words — ceil(log2 K) bits per particle — so the scan carry is
+    a [L, B, W] buffer instead of [L, B, P] int32. That is not (only) a
+    memory nicety: XLA CPU inserts per-step whole-buffer copies around
+    the read-modify-write of the z carry inside the resample loop, and
+    shrinking the buffer 10x (K=5, P=10 packs into ONE word) is what
+    brings the fused path under the 2x-of-legacy wall target.
+    """
+    bits = max(1, (k_dim - 1).bit_length())
+    ppw = max(1, 32 // bits)
+    return bits, ppw, -(-n_particles // ppw)
+
+
+def _l2r_fused_core(keys_kd, beta_w, weights, alpha, n_particles,
+                    count_weighted):
+    """Shared fused left-to-right scan over [B] docs at once.
+
+    keys_kd [B, 2] uint32 per-document key data (already doc-folded);
+    beta_w [B, L, K]; weights [B, L] float — the dense layout passes the
+    0/1 mask, the unique layout the token counts (the two estimators
+    differ ONLY in whether slot n's score is multiplied by its count,
+    selected by ``count_weighted``).
+
+    Identical PRNG streams to the serial estimators — position keys via
+    ``fold_in(doc_key, n)``, resample uniforms as column n of
+    ``uniform(k_rs, (P, L))``, the whole derivation replicated bit-exactly
+    by :mod:`repro.core.threefry` — but restructured for wall time:
+
+    * position-major state (z [L, B, *], beta_w_t [L, B, K]) so every
+      inner-loop slice is a leading-axis row, not a strided gather;
+    * per-step uniforms computed IN the resample loop via
+      ``tf3.uniform_column`` (one threefry cipher per consumed value,
+      instead of materializing the [B, P, L] block each position);
+    * the draw uses ``estep.sample_from_unnormalized_seq`` — fixed
+      sequential cumsum association, shape- and context-independent bits;
+    * the inner loop runs ``fori_loop(0, n)`` — the serial paths loop
+      over all L positions and mask the tail to no-ops; dropping those
+      identity steps halves the sequential work without touching any
+      consumed value.
+    """
+    b, l, k_dim = beta_w.shape
+    p = n_particles
+    dt = beta_w.dtype
+    alpha_sum = alpha * k_dim
+    bits, ppw, n_words = _z_packing(p, k_dim)
+    lane = jnp.arange(ppw, dtype=jnp.uint32) * jnp.uint32(bits)
+    vmask = jnp.uint32((1 << bits) - 1)
+    p_pad = n_words * ppw
+
+    def pack(z):                   # [B, P] int32 -> [B, W] uint32
+        if p_pad != p:
+            z = jnp.concatenate(
+                [z, jnp.zeros(z.shape[:-1] + (p_pad - p,), z.dtype)], -1)
+        zw = z.astype(jnp.uint32).reshape(z.shape[:-1] + (n_words, ppw))
+        return (zw << lane).sum(-1, dtype=jnp.uint32)
+
+    def unpack(w):                 # [B, W] uint32 -> [B, P] int32
+        z = ((w[..., None] >> lane) & vmask).astype(jnp.int32)
+        return z.reshape(w.shape[:-1] + (p_pad,))[..., :p]
+
+    beta_w_t = jnp.moveaxis(beta_w, 1, 0)           # [L, B, K]
+    w_t = weights.astype(dt).T                      # [L, B]
+
+    def position(carry, n_idx):
+        z_prev, n_k = carry        # z [L, B, W] u32, n_k [B, P, K]
+        kd_n = tf3.fold_in_data(keys_kd,
+                                jnp.full((b,), n_idx, jnp.uint32))
+        rs_d, dr_d = tf3.split2_data(kd_n)          # [B, 2] each
+        u_dr_n = tf3.uniform_halves(dr_d, p)        # [B, P]
+
+        def resample(i, st):
+            z, n_k = st
+            zi = unpack(z[i])                       # [B, P]
+            u = tf3.uniform_column(rs_d, p, l, i)   # [B, P]
+            wf = w_t[i][:, None]                    # [B, 1]
+            bw = beta_w_t[i][:, None, :]            # [B, 1, K]
+            n_k = n_k - wf[..., None] * estep_mod._one_hot(zi, k_dim, dt)
+            probs = (n_k + alpha) * bw
+            new_z = estep_mod.sample_from_unnormalized_seq(probs, u)
+            new_z = jnp.where(wf > 0, new_z, zi)
+            n_k = n_k + wf[..., None] * estep_mod._one_hot(new_z, k_dim,
+                                                           dt)
+            z = z.at[i].set(pack(new_z))
+            return z, n_k
+
+        z, n_k = jax.lax.fori_loop(0, n_idx, resample, (z_prev, n_k))
+
+        bw_n = beta_w_t[n_idx]                      # [B, K]
+        n_lt = n_k.sum(-1, keepdims=True)
+        theta_hat = (n_k + alpha) / (n_lt + alpha_sum)
+        p_w = (theta_hat * bw_n[:, None, :]).sum(-1)
+        raw = jnp.log(jnp.maximum(p_w.mean(axis=1), 1e-30))
+        if count_weighted:
+            raw = w_t[n_idx] * raw
+        log_p = jnp.where(w_t[n_idx] > 0, raw, 0.0)
+
+        probs_n = (n_k + alpha) * bw_n[:, None, :]
+        z_n = estep_mod.sample_from_unnormalized(probs_n, u_dr_n)
+        add = w_t[n_idx][:, None, None]
+        n_k = n_k + add * jax.nn.one_hot(z_n, k_dim, dtype=n_k.dtype)
+        z = z.at[n_idx].set(pack(
+            jnp.where((w_t[n_idx] > 0)[:, None], z_n, unpack(z[n_idx]))))
+        return (z, n_k), log_p
+
+    z0 = jnp.zeros((l, b, n_words), jnp.uint32)
+    nk0 = jnp.zeros((b, p, k_dim), dt)
+    (_, _), log_ps = jax.lax.scan(position, (z0, nk0), jnp.arange(l))
+    return log_ps.sum(axis=0)                       # [B]
+
+
+def left_to_right_fused(key: jax.Array, doc_ids: jax.Array,
+                        beta_w: jax.Array, mask: jax.Array, alpha: float,
+                        n_particles: int = 10) -> jax.Array:
+    """Fused-grid twin of :func:`left_to_right_from_beta_w`.
+
+    Same signature, same ``fold_in(key, doc_id)`` / ``fold_in(doc_key,
+    position)`` stream derivation (so chunk/batch invariance is
+    untouched), restructured for wall time — see :func:`_l2r_fused_core`.
+    Bit-identical to the serial estimator on every tested input; the two
+    can differ only where a resample draw lands exactly on the one-ulp
+    reassociation gap of XLA's cumsum lowering (a measure-zero tie that
+    is a correct draw either way), asserted equal in
+    tests/test_evaluation.py and by the byte-identical eval goldens.
+    """
+    keys_kd = tf3.key_data(_doc_keys(key, doc_ids))
+    return _l2r_fused_core(keys_kd, beta_w, mask.astype(beta_w.dtype),
+                           alpha, n_particles, count_weighted=False)
+
+
+def left_to_right_unique_fused(key: jax.Array, doc_ids: jax.Array,
+                               beta_w: jax.Array, counts: jax.Array,
+                               alpha: float,
+                               n_particles: int = 10) -> jax.Array:
+    """Fused-grid twin of :func:`left_to_right_unique_from_beta_w`.
+
+    The count-weighted (CSR unique-slot) layout through the same fused
+    core: weights are the token counts, slot n scores ``c * log p``.
+    """
+    keys_kd = tf3.key_data(_doc_keys(key, doc_ids))
+    return _l2r_fused_core(keys_kd, beta_w, counts.astype(beta_w.dtype),
+                           alpha, n_particles, count_weighted=True)
+
+
+EVAL_BACKENDS = ("fused", "serial", "pallas")
+
+
 def _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
-                    layout):
-    """Layout dispatch shared by the chunked and in-loop evaluators.
+                    layout, backend="fused"):
+    """Layout x backend dispatch shared by the chunked and in-loop
+    evaluators (the eval twin of the ``estep.get_estep`` registry).
 
-    In the "unique" layout ``mask`` carries the [B, U] int32 counts."""
-    if layout == "unique":
-        return left_to_right_unique_from_beta_w(key, doc_ids, beta_w,
-                                                mask, alpha, n_particles)
-    if layout != "dense":
+    In the "unique" layout ``mask`` carries the [B, U] int32 counts.
+    Backends: "fused" (the fast path, default), "serial" (the reference
+    the fused grid and the kernel are asserted against), "pallas" (the
+    kernels/lda_l2r on-chip sweep; interpret auto-detected).
+    """
+    if layout not in ("dense", "unique"):
         raise ValueError(f"layout must be dense|unique, got {layout!r}")
-    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
-                                     n_particles)
+    unique = layout == "unique"
+    if backend == "serial":
+        fn = (left_to_right_unique_from_beta_w if unique
+              else left_to_right_from_beta_w)
+        return fn(key, doc_ids, beta_w, mask, alpha, n_particles)
+    if backend == "fused":
+        fn = left_to_right_unique_fused if unique else left_to_right_fused
+        return fn(key, doc_ids, beta_w, mask, alpha, n_particles)
+    if backend == "pallas":
+        from repro.kernels.lda_l2r import ops as l2r_ops
+        return l2r_ops.l2r_scores(key, doc_ids, beta_w,
+                                  mask.astype(beta_w.dtype), alpha,
+                                  n_particles=n_particles,
+                                  count_weighted=unique)
+    raise ValueError(f"eval backend must be one of {EVAL_BACKENDS}, "
+                     f"got {backend!r}")
 
 
-@partial(jax.jit, static_argnames=("n_particles",))
+@partial(jax.jit, static_argnames=("n_particles", "backend"))
 def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
                                  mask: jax.Array, beta: jax.Array,
                                  alpha: float,
                                  n_particles: int = 10,
-                                 doc_ids: jax.Array | None = None
-                                 ) -> jax.Array:
+                                 doc_ids: jax.Array | None = None,
+                                 backend: str = "fused") -> jax.Array:
     """[B] per-document log-likelihood estimates. words/mask: [B, L].
 
     ``doc_ids`` (default ``arange(B)``) are the identities fed to the
@@ -275,24 +447,51 @@ def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
     if doc_ids is None:
         doc_ids = jnp.arange(b, dtype=jnp.int32)
     beta_w = jnp.take(beta.T, words, axis=0)                  # [B, L, K]
-    return left_to_right_from_beta_w(key, doc_ids, beta_w, mask, alpha,
-                                     n_particles)
+    return _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
+                           "dense", backend)
 
 
-@partial(jax.jit, static_argnames=("n_particles", "layout"))
+@partial(jax.jit, static_argnames=("n_particles", "layout", "backend"))
 def _chunk_ll_from_stats(key, doc_ids, words, mask, stats, tau, alpha,
-                         n_particles, layout="dense"):
+                         n_particles, layout="dense", backend="fused"):
     beta_w = estep_mod.beta_w_from_stats(stats, words, tau)
     return _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
-                           layout)
+                           layout, backend)
 
 
-@partial(jax.jit, static_argnames=("n_particles", "layout"))
+@partial(jax.jit, static_argnames=("n_particles", "layout", "backend"))
 def _chunk_ll_from_beta(key, doc_ids, words, mask, beta, alpha,
-                        n_particles, layout="dense"):
+                        n_particles, layout="dense", backend="fused"):
     beta_w = jnp.take(beta.T, words, axis=0)
     return _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
-                           layout)
+                           layout, backend)
+
+
+_CHUNK_BUDGET_BYTES = 64 << 20     # default live-footprint target
+
+
+def auto_chunk_docs(n_docs: int, doc_len: int, n_particles: int,
+                    n_topics: int,
+                    budget_bytes: int = _CHUNK_BUDGET_BYTES) -> int:
+    """Chunk size whose live eval footprint fits a memory budget.
+
+    The fused scan's per-document live state is O(L) likelihood rows
+    ([L, K] twice: input + position-major transpose), the packed
+    assignment carry ([L, W] uint32 words), the particle counts and a
+    few [P, K]-sized elementwise temporaries, plus the per-step uniform
+    columns — all independent of B, so the chunk size is just
+    ``budget / per_doc_bytes`` clamped to [1, n_docs]. Used by
+    :func:`evaluate_heldout` when ``chunk_docs`` is not given, replacing
+    the old silent "one chunk = the whole batch" default; chunk
+    invariance makes the picked size a pure performance knob
+    (tests/test_evaluation.py asserts the auto-picked chunking is
+    bitwise-equal to chunk_docs=B).
+    """
+    _bits, _ppw, n_words = _z_packing(n_particles, n_topics)
+    per_doc = 4 * (2 * doc_len * n_topics + doc_len * n_words
+                   + 8 * n_particles * n_topics + 4 * n_particles
+                   + doc_len)
+    return max(1, min(int(budget_bytes) // per_doc, n_docs))
 
 
 def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
@@ -300,7 +499,8 @@ def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
                      stats: jax.Array | None = None, tau: float = 1e-2,
                      alpha: float, n_particles: int = 10,
                      chunk_docs: int | None = None,
-                     layout: str = "dense") -> jax.Array:
+                     layout: str = "dense",
+                     backend: str = "fused") -> jax.Array:
     """Streaming per-document held-out log-likelihoods, [B].
 
     Pass exactly one of ``beta=`` (dense [K, V] topic matrix) or
@@ -313,14 +513,24 @@ def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
     compilation, C-shaped), so 10k+-doc held-out sets stream through one
     host; per-document streams are keyed by the GLOBAL doc index, so the
     result is bitwise-identical for every chunking (including C=B and
-    C=1). The last chunk is padded with empty (fully masked) documents,
-    which contribute log p = 0 and are sliced off.
+    C=1). The default derives C from a memory budget
+    (:func:`auto_chunk_docs`) instead of silently materializing all B
+    documents at once. The last chunk is padded with empty (fully
+    masked) documents, which contribute log p = 0 and are sliced off.
+
+    The host loop is pipelined: chunk i+1's ``(doc_ids, words, mask)``
+    transfer is issued (``jax.device_put``, async) before chunk i's
+    scores are computed, and nothing in the loop blocks on a result —
+    dispatch stays ahead of the device so host->device ingestion
+    overlaps the position scans instead of serializing with them.
 
     ``layout="unique"`` (the Sparse corpus layer) converts the documents
     to the (word_id, count) view once up front and runs the
     count-weighted left-to-right scan over U unique slots instead of L
-    positions (:func:`left_to_right_unique_from_beta_w`) — exact for
-    duplicate-free documents, the blocked approximation otherwise.
+    positions — exact for duplicate-free documents, the blocked
+    approximation otherwise. ``backend`` selects the estimator
+    implementation (``EVAL_BACKENDS``: fused | serial | pallas), all
+    bit-compatible per document.
     """
     if (beta is None) == (stats is None):
         raise ValueError("pass exactly ONE of beta= or stats=")
@@ -331,7 +541,11 @@ def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
         # slots behave exactly like masked positions
         words, mask = estep_mod.unique_view(words, mask)
     b, l = words.shape
-    c = b if chunk_docs is None else max(1, min(int(chunk_docs), b))
+    if chunk_docs is None:
+        k_dim = (beta if beta is not None else stats).shape[0]
+        c = auto_chunk_docs(b, l, n_particles, k_dim)
+    else:
+        c = max(1, min(int(chunk_docs), b))
     n_chunks = -(-b // c)
     if n_chunks * c > b:
         pad = n_chunks * c - b
@@ -340,17 +554,28 @@ def evaluate_heldout(key: jax.Array, words: jax.Array, mask: jax.Array, *,
         mask = jnp.concatenate(
             [mask, jnp.zeros((pad, l), mask.dtype)])
     doc_ids = jnp.arange(n_chunks * c, dtype=jnp.int32)
-    lls = []
-    for ci in range(n_chunks):
+
+    def chunk_inputs(ci):
         sl = slice(ci * c, (ci + 1) * c)
+        # async h2d: by the time a chunk is consumed its transfer was
+        # issued one iteration ago and has overlapped the previous
+        # chunk's compute
+        return jax.device_put((doc_ids[sl], words[sl], mask[sl]))
+
+    lls = []
+    pending = chunk_inputs(0)
+    for ci in range(n_chunks):
+        ids_c, words_c, mask_c = pending
+        if ci + 1 < n_chunks:
+            pending = chunk_inputs(ci + 1)     # double-buffered ingest
         if stats is not None:
             lls.append(_chunk_ll_from_stats(
-                key, doc_ids[sl], words[sl], mask[sl], stats, tau, alpha,
-                n_particles, layout))
+                key, ids_c, words_c, mask_c, stats, tau, alpha,
+                n_particles, layout, backend))
         else:
             lls.append(_chunk_ll_from_beta(
-                key, doc_ids[sl], words[sl], mask[sl], beta, alpha,
-                n_particles, layout))
+                key, ids_c, words_c, mask_c, beta, alpha,
+                n_particles, layout, backend))
     return jnp.concatenate(lls)[:b]
 
 
@@ -367,7 +592,8 @@ def _lp_mean(ll: jax.Array, mask: jax.Array) -> jax.Array:
 def heldout_lp_from_stats(key: jax.Array, words: jax.Array,
                           mask: jax.Array, stats: jax.Array, tau: float,
                           alpha: float, n_particles: int = 10,
-                          layout: str = "dense") -> jax.Array:
+                          layout: str = "dense",
+                          backend: str = "fused") -> jax.Array:
     """Scalar LP straight from a (possibly vocab-sharded) statistic.
 
     Pure traced function — this is the in-loop evaluator that rides
@@ -381,17 +607,18 @@ def heldout_lp_from_stats(key: jax.Array, words: jax.Array,
     doc_ids = jnp.arange(words.shape[0], dtype=jnp.int32)
     beta_w = estep_mod.beta_w_from_stats(stats, words, tau)
     ll = _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
-                         layout)
+                         layout, backend)
     return _lp_mean(ll, mask)
 
 
 def log_perplexity(key: jax.Array, words: jax.Array, mask: jax.Array,
                    beta: jax.Array, alpha: float,
-                   n_particles: int = 10) -> jax.Array:
+                   n_particles: int = 10,
+                   backend: str = "fused") -> jax.Array:
     """Average held-out log-perplexity LP = -mean_d log p(X_d | eta),
     the mean taken over non-empty documents only."""
     ll = left_to_right_log_likelihood(key, words, mask, beta, alpha,
-                                      n_particles)
+                                      n_particles, backend=backend)
     return _lp_mean(ll, mask)
 
 
@@ -400,11 +627,13 @@ def log_perplexity_from_stats(key: jax.Array, words: jax.Array,
                               tau: float = 1e-2, alpha: float,
                               n_particles: int = 10,
                               chunk_docs: int | None = None,
-                              layout: str = "dense") -> jax.Array:
+                              layout: str = "dense",
+                              backend: str = "fused") -> jax.Array:
     """Scalar LP via the streaming evaluator (chunked, blocked-stats)."""
     ll = evaluate_heldout(key, words, mask, stats=stats, tau=tau,
                           alpha=alpha, n_particles=n_particles,
-                          chunk_docs=chunk_docs, layout=layout)
+                          chunk_docs=chunk_docs, layout=layout,
+                          backend=backend)
     return _lp_mean(ll, mask)
 
 

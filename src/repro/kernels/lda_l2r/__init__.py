@@ -1,0 +1,5 @@
+"""Pallas TPU kernel for on-chip left-to-right held-out scoring."""
+
+from repro.kernels.lda_l2r.ops import l2r_scores
+
+__all__ = ["l2r_scores"]

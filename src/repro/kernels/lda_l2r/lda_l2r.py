@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: on-chip left-to-right held-out scoring.
+
+Wallach et al.'s algorithm 3 for a block of documents, entirely inside
+one grid step: the position scan, the i < n resample loop, the predictive
+scoring and the per-position particle draw all run on-chip — only the
+[B_blk] per-document log-likelihood totals leave the kernel.
+
+Unlike lda_gibbs / lda_sparse this kernel takes NO pre-drawn uniforms:
+the whole point of the streaming evaluator is that pre-drawing the
+resample tensor costs O(B*P*L*L) memory. Instead the kernel receives the
+per-document PRNG key words ([B_blk, 2] uint32) and derives the exact
+jax.random streams itself with :mod:`repro.core.threefry` — plain
+uint32 add/xor/shift plus one bitcast, all ops Pallas supports — so each
+resample step generates only the [B_blk, P] uniform column it is about
+to consume. Stream derivation (``fold_in(doc_key, n)`` then
+``split``/``uniform``) is identical to the serial and fused evaluators;
+per-document results are bitwise chunk- and batch-invariant like theirs.
+
+Grid and residency follow the house layout: a 1-D grid over document
+blocks, with the [B_blk, L, K] likelihood rows, the weights and the
+position-major assignment buffer resident in VMEM for the whole scan.
+``weights`` carries the dense layout's 0/1 mask or the unique (CSR)
+layout's token counts — ``count_weighted`` picks whether slot n's score
+is multiplied by its count, the ONLY difference between the two
+estimators (mirroring ``evaluation._l2r_fused_core``, which is the
+oracle this kernel is asserted bitwise against).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import estep as estep_mod
+from repro.core import threefry as tf3
+
+
+def _one_hot(z: jax.Array, k: int, dtype) -> jax.Array:
+    """[..., ] int32 -> [..., k] one-hot (broadcasted iota; MXU-free)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (*z.shape, k), len(z.shape))
+    return (z[..., None] == iota).astype(dtype)
+
+
+def l2r_block_kernel(kd_ref, beta_w_ref, w_ref, alpha_ref, ll_ref,
+                     *, n_particles: int, count_weighted: bool):
+    """One grid step: full left-to-right estimate for a doc block.
+
+    kd_ref:     [B_blk, 2]    u32  per-document key data (doc-folded)
+    beta_w_ref: [B_blk, L, K] f32  per-position likelihood rows beta[:, w]
+    w_ref:      [B_blk, L]    f32  mask (dense) or counts (unique);
+                                   0 = padding position/slot
+    alpha_ref:  [1, 1]        f32  symmetric Dirichlet hyperparameter
+                                   (an input, not a static, so traced
+                                   alphas flow through the jitted chunk)
+    ll_ref:     [L, B_blk]    f32  OUT per-POSITION scores; the caller
+                                   reduces over L at the full [L, B]
+                                   shape — summing inside the kernel
+                                   would tie the reduction association
+                                   to B_blk and drift ulps off the
+                                   fused/serial oracles whenever
+                                   block_docs != B
+    """
+    kd = kd_ref[...]
+    beta_w = beta_w_ref[...]
+    w = w_ref[...]
+    alpha = alpha_ref[0, 0]
+    b, l, k_dim = beta_w.shape
+    p = n_particles
+    dt = beta_w.dtype
+    alpha_sum = alpha * k_dim
+
+    # position-major views: every loop slice is a leading-axis row
+    beta_w_t = jnp.moveaxis(beta_w, 1, 0)               # [L, B, K]
+    w_t = w.T                                           # [L, B]
+
+    def row(x, i):
+        return jax.lax.dynamic_slice_in_dim(x, i, 1, axis=0)[0]
+
+    def position(n_idx, carry):
+        z, n_k, ll = carry     # z [L,B,P] i32, n_k [B,P,K], ll [B]
+        kd_n = tf3.fold_in_data(kd, jnp.full((b,), n_idx, jnp.uint32))
+        rs_d, dr_d = tf3.split2_data(kd_n)              # [B, 2] each
+        u_dr_n = tf3.uniform_halves(dr_d, p)            # [B, P]
+
+        def resample(i, st):
+            z, n_k = st
+            zi = row(z, i)                              # [B, P]
+            u = tf3.uniform_column(rs_d, p, l, i)       # [B, P]
+            wf = row(w_t, i)[:, None]                   # [B, 1]
+            bw = row(beta_w_t, i)[:, None, :]           # [B, 1, K]
+            n_k = n_k - wf[..., None] * _one_hot(zi, k_dim, dt)
+            probs = (n_k + alpha) * bw
+            new_z = estep_mod.sample_from_unnormalized_seq(probs, u)
+            new_z = jnp.where(wf > 0, new_z, zi)
+            n_k = n_k + wf[..., None] * _one_hot(new_z, k_dim, dt)
+            z = jax.lax.dynamic_update_slice_in_dim(
+                z, new_z[None], i, axis=0)
+            return z, n_k
+
+        z, n_k = jax.lax.fori_loop(0, n_idx, resample, (z, n_k))
+
+        bw_n = row(beta_w_t, n_idx)                     # [B, K]
+        w_n = row(w_t, n_idx)                           # [B]
+        n_lt = n_k.sum(-1, keepdims=True)
+        theta_hat = (n_k + alpha) / (n_lt + alpha_sum)
+        p_w = (theta_hat * bw_n[:, None, :]).sum(-1)
+        raw = jnp.log(jnp.maximum(p_w.mean(axis=1), 1e-30))
+        if count_weighted:
+            raw = w_n * raw
+        log_p = jnp.where(w_n > 0, raw, 0.0)
+
+        probs_n = (n_k + alpha) * bw_n[:, None, :]
+        z_n = estep_mod.sample_from_unnormalized(probs_n, u_dr_n)
+        n_k = n_k + w_n[:, None, None] * _one_hot(z_n, k_dim, dt)
+        z = jax.lax.dynamic_update_slice_in_dim(
+            z, jnp.where((w_n > 0)[:, None], z_n, row(z, n_idx))[None],
+            n_idx, axis=0)
+        ll = jax.lax.dynamic_update_slice_in_dim(
+            ll, log_p[None], n_idx, axis=0)
+        return z, n_k, ll
+
+    z0 = jnp.zeros((l, b, p), jnp.int32)
+    nk0 = jnp.zeros((b, p, k_dim), dt)
+    ll0 = jnp.zeros((l, b), dt)
+    _, _, ll = jax.lax.fori_loop(0, l, position, (z0, nk0, ll0))
+    ll_ref[...] = ll
+
+
+def l2r_scores_pallas(kd: jax.Array, beta_w: jax.Array, weights: jax.Array,
+                      alpha: jax.Array, *, n_particles: int,
+                      count_weighted: bool, block_docs: int = 8,
+                      interpret: bool = True) -> jax.Array:
+    """pallas_call wrapper. beta_w [B,L,K]; B must divide by block_docs.
+
+    Returns the [L, B] per-position score matrix; the caller owns the
+    final sum over positions (see l2r_block_kernel's ll_ref note).
+    """
+    b, l, k = beta_w.shape
+    if b % block_docs:
+        raise ValueError(f"B={b} not divisible by block_docs={block_docs}")
+    grid = (b // block_docs,)
+
+    kernel = functools.partial(l2r_block_kernel, n_particles=n_particles,
+                               count_weighted=count_weighted)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_docs, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_docs, l, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_docs, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, block_docs), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((l, b), beta_w.dtype),
+        interpret=interpret,
+    )(kd, beta_w, weights, alpha)

@@ -1,0 +1,68 @@
+"""Public jit'd wrapper for the lda_l2r Pallas kernel.
+
+`l2r_scores` is the evaluation layer's "pallas" backend
+(``EVAL_BACKENDS``): same signature shape as the fused/serial estimators
+— per-document key streams from ``fold_in(key, doc_id)`` computed here,
+outside the kernel, so the kernel itself is key-agnostic — with the
+house padding contract (any B, padded to a block_docs multiple; padded
+docs carry weight 0 everywhere and their scores are sliced off) and the
+`interpret=None` auto-detect (compiled on TPU, interpreter elsewhere via
+kernels/common.resolve_interpret).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import threefry as tf3
+from repro.kernels.common import resolve_interpret
+from repro.kernels.lda_l2r.lda_l2r import l2r_scores_pallas
+
+
+def _pad_to(x: jax.Array, b_pad: int, fill=0):
+    pad = b_pad - x.shape[0]
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@partial(jax.jit, static_argnames=("n_particles", "count_weighted",
+                                   "block_docs", "interpret"))
+def l2r_scores(key: jax.Array, doc_ids: jax.Array, beta_w: jax.Array,
+               weights: jax.Array, alpha, *, n_particles: int = 10,
+               count_weighted: bool = False, block_docs: int = 8,
+               interpret: bool | None = None) -> jax.Array:
+    """Padded pallas_call: accepts any B, pads to a block multiple.
+
+    key: PRNG key (typed or raw); doc_ids [B] int32 GLOBAL document
+    identities (the chunk-invariance anchor); beta_w [B, L, K] likelihood
+    rows; weights [B, L] float — the dense 0/1 mask or the unique-layout
+    token counts (pick ``count_weighted`` accordingly); alpha may be a
+    Python float or a traced scalar. Returns ll [B].
+    """
+    b, l, _k = beta_w.shape
+    if weights.shape != (b, l):
+        # a silently-broadcast [1, L] weights would read out of bounds
+        # through the BlockSpec instead of broadcasting
+        raise ValueError(
+            f"weights must be [{b}, {l}] like beta_w[:, :, 0], got "
+            f"{weights.shape}")
+    kd = tf3.key_data(
+        jax.vmap(lambda d: jax.random.fold_in(key, d))(doc_ids))
+    b_pad = -(-b // block_docs) * block_docs
+    alpha_arr = jnp.asarray(alpha, beta_w.dtype).reshape(1, 1)
+    ll_pos = l2r_scores_pallas(
+        _pad_to(kd, b_pad),
+        _pad_to(beta_w, b_pad),
+        _pad_to(weights, b_pad),
+        alpha_arr, n_particles=n_particles,
+        count_weighted=count_weighted, block_docs=block_docs,
+        interpret=resolve_interpret(interpret))
+    # the position sum runs HERE, on the full [L, B] matrix, so its
+    # reduction association matches the fused/serial `log_ps.sum(axis=0)`
+    # bit-for-bit regardless of block_docs
+    return ll_pos[:, :b].sum(axis=0)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the lda_l2r Pallas kernel.
+
+As with lda_gibbs / lda_sparse, the oracle IS the shared production
+implementation: the fused left-to-right estimators in
+`repro.core.evaluation` (`left_to_right_fused` /
+`left_to_right_unique_fused`, both thin wrappers over
+`_l2r_fused_core`). The kernel performs the same position scan with the
+same threefry stream derivation and the same float-op order, so the two
+are asserted bitwise-equal in tests/test_kernels.py — and both are
+asserted against the original serial estimators in
+tests/test_evaluation.py, closing the triangle.
+"""
+
+from __future__ import annotations
+
+from repro.core.evaluation import (left_to_right_fused,
+                                   left_to_right_unique_fused)
+
+__all__ = ["left_to_right_fused", "left_to_right_unique_fused"]

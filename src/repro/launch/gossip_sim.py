@@ -52,7 +52,8 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     mesh_shape: tuple[int, int] | None = None,
                     eval_every: int = 0,
                     eval_spec: evaluation.EvalSpec | None = None,
-                    corpus_layout: str = "dense"):
+                    corpus_layout: str = "dense",
+                    eval_backend: str = "fused"):
     """words/mask [n, D, L] node-sharded over the mesh "data" axis.
 
     Returns (stats [n, K, V], consensus trace, wall seconds) — plus, when
@@ -250,7 +251,7 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
             lambda st: evaluation.heldout_lp_from_stats(
                 eval_spec.key, ew, em, st,
                 lda.tau, lda.alpha, eval_spec.n_particles,
-                eval_spec.layout)))
+                eval_spec.layout, eval_backend)))
 
     alive_dev = jnp.asarray(alive)
     stats = stats0

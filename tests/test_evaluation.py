@@ -26,8 +26,13 @@ from statutil import chi2_critical, chi2_statistic
 
 from repro.core import deleda
 from repro.core import estep as estep_mod
-from repro.core.evaluation import (EvalSpec, evaluate_heldout,
+from repro.core.evaluation import (EVAL_BACKENDS, EvalSpec,
+                                   auto_chunk_docs, evaluate_heldout,
+                                   left_to_right_from_beta_w,
+                                   left_to_right_fused,
                                    left_to_right_log_likelihood,
+                                   left_to_right_unique_from_beta_w,
+                                   left_to_right_unique_fused,
                                    log_perplexity,
                                    log_perplexity_from_stats,
                                    relative_perplexity_error)
@@ -276,6 +281,119 @@ def test_empty_docs_excluded_from_lp(corpus, eval_setup):
                             n_particles=4)
     np.testing.assert_allclose(float(lp_pad), float(lp), rtol=1e-6)
     assert float(lp) > 0
+
+
+# ---------------------------------------------------------------------------
+# Evaluation layer: backend registry (fused fast path, pallas kernel)
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_serial_bitwise_dense(corpus, eval_setup):
+    """The fused multi-doc grid changes the wall clock, not one bit of
+    the estimate: same fold_in streams, same draw order."""
+    _stats, beta = eval_setup
+    key = jax.random.key(21)
+    doc_ids = jnp.arange(corpus.test_words.shape[0], dtype=jnp.int32)
+    beta_w = jnp.take(beta.T, corpus.test_words, axis=0)
+    serial = jax.jit(left_to_right_from_beta_w,
+                     static_argnames=("n_particles",))(
+        key, doc_ids, beta_w, corpus.test_mask, CFG.alpha, n_particles=4)
+    fused = jax.jit(left_to_right_fused,
+                    static_argnames=("n_particles",))(
+        key, doc_ids, beta_w, corpus.test_mask, CFG.alpha, n_particles=4)
+    np.testing.assert_array_equal(np.asarray(serial), np.asarray(fused))
+
+
+def test_fused_matches_serial_bitwise_unique(corpus, eval_setup):
+    """Count-weighted twin: the unique (CSR) layout through the fused
+    core equals the serial unique estimator bitwise."""
+    _stats, beta = eval_setup
+    key = jax.random.key(22)
+    uw, uc = estep_mod.unique_view(corpus.test_words, corpus.test_mask)
+    doc_ids = jnp.arange(uw.shape[0], dtype=jnp.int32)
+    beta_w = jnp.take(beta.T, uw, axis=0)
+    serial = jax.jit(left_to_right_unique_from_beta_w,
+                     static_argnames=("n_particles",))(
+        key, doc_ids, beta_w, uc, CFG.alpha, n_particles=4)
+    fused = jax.jit(left_to_right_unique_fused,
+                    static_argnames=("n_particles",))(
+        key, doc_ids, beta_w, uc, CFG.alpha, n_particles=4)
+    np.testing.assert_array_equal(np.asarray(serial), np.asarray(fused))
+
+
+@pytest.mark.parametrize("layout", ["dense", "unique"])
+@pytest.mark.parametrize("backend", EVAL_BACKENDS)
+def test_backend_chunk_invariance_bitwise(corpus, eval_setup, layout,
+                                          backend):
+    """Every backend x layout: chunk_docs in {1, 7, C, B, auto} give the
+    same bits, and every backend gives the SERIAL backend's bits — one
+    estimator, three implementations."""
+    _stats, beta = eval_setup
+    key = jax.random.key(23)
+    ref = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                           beta=beta, alpha=CFG.alpha, n_particles=4,
+                           chunk_docs=16, layout=layout,
+                           backend="serial")
+    for chunk in (1, 7, 11, 16, None):
+        got = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                               beta=beta, alpha=CFG.alpha, n_particles=4,
+                               chunk_docs=chunk, layout=layout,
+                               backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(ref), np.asarray(got),
+            err_msg=f"{backend}/{layout}/chunk={chunk}")
+
+
+def test_unknown_backend_rejected(corpus, eval_setup):
+    _stats, beta = eval_setup
+    with pytest.raises(ValueError, match="eval backend"):
+        evaluate_heldout(jax.random.key(0), corpus.test_words,
+                         corpus.test_mask, beta=beta, alpha=CFG.alpha,
+                         backend="vectorized")
+
+
+def test_auto_chunk_docs_bounds():
+    """Explicit chunk_docs is honored verbatim; the auto pick clamps to
+    [1, B] and shrinks as the per-doc footprint grows."""
+    assert auto_chunk_docs(100, 32, 10, 5, budget_bytes=1) == 1
+    assert auto_chunk_docs(100, 32, 10, 5) == 100          # small docs
+    big = auto_chunk_docs(10**9, 64, 10, 5)
+    assert 1 <= big < 10**9                                 # budget-bound
+    assert auto_chunk_docs(10**9, 128, 10, 5) < big         # longer docs
+
+
+def test_padded_tail_chunk_regression(corpus, eval_setup):
+    """B not divisible by chunk_docs: the zero-padded tail chunk must
+    neither change any real document's bits nor leak the pad docs into
+    the LP mean (count_nonempty normalization)."""
+    stats, beta = eval_setup
+    key = jax.random.key(24)
+    b = corpus.test_words.shape[0]
+    assert b % 7 != 0                       # 16 docs, tail chunk of 2
+    full = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                            beta=beta, alpha=CFG.alpha, n_particles=4,
+                            chunk_docs=b)
+    tail = evaluate_heldout(key, corpus.test_words, corpus.test_mask,
+                            beta=beta, alpha=CFG.alpha, n_particles=4,
+                            chunk_docs=7)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(tail))
+    lp_whole = log_perplexity_from_stats(
+        key, corpus.test_words, corpus.test_mask, stats, tau=CFG.tau,
+        alpha=CFG.alpha, n_particles=4)
+    lp_tail = log_perplexity_from_stats(
+        key, corpus.test_words, corpus.test_mask, stats, tau=CFG.tau,
+        alpha=CFG.alpha, n_particles=4, chunk_docs=7)
+    np.testing.assert_array_equal(np.asarray(lp_whole),
+                                  np.asarray(lp_tail))
+    # planting genuinely empty docs must not move the LP either
+    m_holes = corpus.test_mask.at[3].set(False).at[11].set(False)
+    ll = evaluate_heldout(key, corpus.test_words, m_holes, beta=beta,
+                          alpha=CFG.alpha, n_particles=4, chunk_docs=7)
+    assert float(ll[3]) == 0.0 and float(ll[11]) == 0.0
+    lp_holes = log_perplexity_from_stats(
+        key, corpus.test_words, m_holes, stats, tau=CFG.tau,
+        alpha=CFG.alpha, n_particles=4, chunk_docs=7)
+    manual = -float(np.asarray(ll).sum()) / (b - 2)
+    np.testing.assert_allclose(float(lp_holes), manual, rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -41,6 +41,10 @@ SHARDS = 4
 # estimator's fold_in(key, doc_id)/fold_in(doc_key, position) stream is a
 # numeric contract — silent stream drift would un-pin every figure)
 EVAL_SHARDS = (1, SHARDS)
+# ... and the Pallas l2r eval backend is pinned per layout. The kernel is
+# bitwise-equal to the fused estimator, so the dense entry must ALSO be
+# byte-identical to eval:matching:dense:dense:vs1
+EVAL_L2R_LAYOUTS = ("dense", "unique")
 # Sparse corpus layer: the unique-token (CSR) trajectory gets its own
 # pinned entries across comm x estep backends and a vocab-sharded one —
 # it is a DIFFERENT (count-weighted) chain, so it is pinned on its own,
@@ -63,7 +67,7 @@ def _fingerprint(trace: deleda.DeledaTrace) -> dict:
 
 def _run(comm_backend: str, estep_backend: str, kind: str,
          vocab_shards: int = 1, eval_every: int = 0,
-         corpus_layout: str = "dense"):
+         corpus_layout: str = "dense", eval_backend: str = "fused"):
     corpus = make_corpus(CFG, jax.random.key(0),
                          CorpusSpec(n_nodes=N, docs_per_node=4, n_test=4))
     g = watts_strogatz_graph(N, 4, 0.3, seed=0)
@@ -73,7 +77,8 @@ def _run(comm_backend: str, estep_backend: str, kind: str,
                               estep_backend=estep_backend,
                               vocab_shards=vocab_shards,
                               eval_every=eval_every,
-                              corpus_layout=corpus_layout)
+                              corpus_layout=corpus_layout,
+                              eval_backend=eval_backend)
     spec = None
     if eval_every:
         spec = evaluation.EvalSpec(
@@ -113,6 +118,12 @@ def regen_if_requested():
             payload[f"eval:matching:dense:dense:vs{vs}"] = (
                 _eval_fingerprint(_run("dense", "dense", "matching",
                                        vocab_shards=vs, eval_every=10)))
+        for layout in EVAL_L2R_LAYOUTS:
+            payload[f"eval:matching:dense:dense:l2r:{layout}"] = (
+                _eval_fingerprint(_run("dense", "dense", "matching",
+                                       eval_every=10,
+                                       corpus_layout=layout,
+                                       eval_backend="pallas")))
         for cb, eb in SPARSE_COMBOS:
             payload[f"sparse:matching:{cb}:{eb}"] = _fingerprint(
                 _run(cb, eb, "matching", corpus_layout="unique"))
@@ -165,6 +176,27 @@ def test_eval_trace_matches_golden(vs):
     dense = golden["eval:matching:dense:dense:vs1"]
     np.testing.assert_allclose(got["eval_lp"], dense["eval_lp"],
                                rtol=1e-4)
+
+
+@pytest.mark.parametrize("layout", EVAL_L2R_LAYOUTS)
+def test_eval_l2r_trace_matches_golden(layout):
+    """The Pallas l2r eval backend rides the SAME pinned LP trajectory.
+    The kernel is asserted bitwise-equal to the fused estimator in
+    tests/test_kernels.py, so these comparisons are exact
+    (assert_array_equal), not tolerance-based — and the dense entry must
+    equal the fused-backend golden byte for byte."""
+    key = f"eval:matching:dense:dense:l2r:{layout}"
+    golden = _golden()
+    if key not in golden:
+        pytest.skip(f"{key} not in goldens; refresh with GOLDEN_REGEN=1")
+    got = _eval_fingerprint(_run("dense", "dense", "matching",
+                                 eval_every=10, corpus_layout=layout,
+                                 eval_backend="pallas"))
+    assert got["shape"] == golden[key]["shape"]
+    np.testing.assert_array_equal(got["eval_lp"], golden[key]["eval_lp"])
+    if layout == "dense":
+        fused = golden["eval:matching:dense:dense:vs1"]
+        np.testing.assert_array_equal(got["eval_lp"], fused["eval_lp"])
 
 
 @pytest.mark.parametrize("kind", KINDS)

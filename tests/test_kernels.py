@@ -13,6 +13,8 @@ from repro.kernels.gossip_mix.ops import mix_matching
 from repro.kernels.gossip_mix.ref import mix_matching_ref
 from repro.kernels.lda_gibbs import ops as gibbs_ops
 from repro.kernels.lda_gibbs.ref import gibbs_sweeps_ref
+from repro.kernels.lda_l2r import ops as l2r_ops
+from repro.kernels.lda_l2r import ref as l2r_ref
 from repro.core.gossip import hypercube_partners, ring_matchings
 
 
@@ -64,6 +66,90 @@ def test_lda_gibbs_estep_matches_core_bitexact():
             np.asarray(getattr(rk, name), np.float64),
             np.asarray(getattr(rc, name), np.float64), atol=1e-6,
             err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# lda_l2r
+# ---------------------------------------------------------------------------
+
+def _l2r_inputs(b, l, k, v, seed):
+    words = jax.random.randint(jax.random.key(seed), (b, l), 0, v)
+    mask = jax.random.uniform(jax.random.key(seed + 1), (b, l)) < 0.85
+    beta = eta_star(jax.random.uniform(jax.random.key(seed + 2), (k, v)))
+    beta_w = jnp.take(beta.T, words, axis=0)
+    # non-contiguous GLOBAL ids: the stream derivation must not assume
+    # doc_ids == arange(B)
+    doc_ids = (jnp.arange(b, dtype=jnp.int32) * 3 + 5)
+    return doc_ids, beta_w, mask
+
+
+@pytest.mark.parametrize("b,l,k,block_docs", [
+    (8, 16, 5, 8),
+    (13, 20, 5, 8),      # unpadded B: 13 % 8 != 0
+    (13, 20, 5, 1),
+    (13, 20, 5, 16),     # block larger than B (single padded block)
+    (16, 12, 3, 4),
+])
+def test_lda_l2r_matches_ref_bitwise_dense(b, l, k, block_docs):
+    """Kernel == fused oracle EXACTLY (assert_array_equal, not allclose):
+    both run the same threefry stream and the same float-op order, and
+    the position-sum reduction happens outside the kernel at the full
+    [L, B] shape so the association is block-size independent."""
+    doc_ids, beta_w, mask = _l2r_inputs(b, l, k, 50, seed=b * l)
+    key = jax.random.key(31)
+    pk = l2r_ops.l2r_scores(key, doc_ids, beta_w,
+                            mask.astype(beta_w.dtype), 0.5,
+                            n_particles=10, count_weighted=False,
+                            block_docs=block_docs)
+    pr = l2r_ref.left_to_right_fused(key, doc_ids, beta_w, mask, 0.5,
+                                     n_particles=10)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+
+@pytest.mark.parametrize("b,l,k,block_docs", [
+    (13, 10, 5, 8),      # unpadded B
+    (8, 10, 4, 4),
+])
+def test_lda_l2r_matches_ref_bitwise_unique(b, l, k, block_docs):
+    """Count-weighted (CSR unique-slot) layout: weights are token counts,
+    slot n scores c * log p; still bitwise against the unique oracle."""
+    doc_ids, beta_w, mask = _l2r_inputs(b, l, k, 30, seed=b + l)
+    counts = jnp.where(
+        mask, jax.random.randint(jax.random.key(5), (b, l), 1, 4), 0)
+    key = jax.random.key(77)
+    pk = l2r_ops.l2r_scores(key, doc_ids, beta_w,
+                            counts.astype(beta_w.dtype), 0.5,
+                            n_particles=10, count_weighted=True,
+                            block_docs=block_docs)
+    pr = l2r_ref.left_to_right_unique_fused(key, doc_ids, beta_w, counts,
+                                            0.5, n_particles=10)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+
+def test_lda_l2r_traced_alpha():
+    """alpha rides in as a (1, 1) kernel INPUT, not a static — a jitted
+    caller with a traced alpha must work and agree with the float path."""
+    doc_ids, beta_w, mask = _l2r_inputs(8, 12, 4, 40, seed=9)
+    key = jax.random.key(2)
+
+    @jax.jit
+    def with_traced(a):
+        return l2r_ops.l2r_scores(key, doc_ids, beta_w,
+                                  mask.astype(beta_w.dtype), a,
+                                  n_particles=10)
+
+    np.testing.assert_array_equal(
+        np.asarray(with_traced(jnp.float32(0.5))),
+        np.asarray(l2r_ops.l2r_scores(key, doc_ids, beta_w,
+                                      mask.astype(beta_w.dtype), 0.5,
+                                      n_particles=10)))
+
+
+def test_lda_l2r_rejects_broadcast_weights():
+    doc_ids, beta_w, mask = _l2r_inputs(8, 12, 4, 40, seed=3)
+    with pytest.raises(ValueError, match="weights must be"):
+        l2r_ops.l2r_scores(jax.random.key(0), doc_ids, beta_w,
+                           jnp.ones((1, 12), beta_w.dtype), 0.5)
 
 
 # ---------------------------------------------------------------------------

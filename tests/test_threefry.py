@@ -1,0 +1,94 @@
+"""The threefry replica must equal jax.random BITWISE — the fused and
+Pallas evaluators' PRNG contract rests on it. If jax ever flips its
+default PRNG implementation these tests fail loudly instead of letting
+golden streams drift silently."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import threefry as tf3
+
+
+def _kd(key):
+    return np.asarray(jax.random.key_data(key))
+
+
+def test_key_data_typed_and_raw():
+    key = jax.random.key(42)
+    np.testing.assert_array_equal(np.asarray(tf3.key_data(key)), _kd(key))
+    raw = jax.random.key_data(key)
+    np.testing.assert_array_equal(np.asarray(tf3.key_data(raw)), _kd(key))
+
+
+@pytest.mark.parametrize("data", [0, 1, 7, 2**31, 2**32 - 1])
+def test_fold_in_matches_jax(data):
+    key = jax.random.key(3)
+    want = _kd(jax.random.fold_in(key, data))
+    got = np.asarray(tf3.fold_in_data(tf3.key_data(key),
+                                      jnp.uint32(data)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fold_in_batched():
+    key = jax.random.key(11)
+    ids = jnp.arange(37, dtype=jnp.uint32)
+    want = _kd(jax.vmap(lambda d: jax.random.fold_in(key, d))(ids))
+    kd = jnp.broadcast_to(tf3.key_data(key), (37, 2))
+    got = np.asarray(tf3.fold_in_data(kd, ids))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_split2_matches_jax():
+    for seed in (0, 5, 123456):
+        key = jax.random.key(seed)
+        k0, k1 = jax.random.split(key)
+        g0, g1 = tf3.split2_data(tf3.key_data(key))
+        np.testing.assert_array_equal(np.asarray(g0), _kd(k0))
+        np.testing.assert_array_equal(np.asarray(g1), _kd(k1))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 10, 33, 320])
+def test_uniform_halves_matches_jax(n):
+    """Even and ODD sizes — odd n exercises the zero-padded half."""
+    key = jax.random.key(n * 7 + 1)
+    want = np.asarray(jax.random.uniform(key, (n,)))
+    got = np.asarray(tf3.uniform_halves(tf3.key_data(key), n))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("p,l", [(10, 64), (10, 63), (3, 5), (1, 7)])
+def test_uniform_column_matches_jax(p, l):
+    """Column i of uniform(key, (p, l)) without drawing the rest —
+    including odd p*l (the padded-half edge of the flat layout)."""
+    key = jax.random.key(p * l)
+    full = np.asarray(jax.random.uniform(key, (p, l)))
+    kd = tf3.key_data(key)
+    for i in range(l):
+        got = np.asarray(tf3.uniform_column(kd, p, l, jnp.int32(i)))
+        np.testing.assert_array_equal(got, full[:, i], err_msg=f"col {i}")
+
+
+def test_evaluator_stream_derivation_end_to_end():
+    """The exact chain the evaluators use: fold_in(key, doc) ->
+    fold_in(doc_key, pos) -> split -> uniform draws, all bit-equal."""
+    key = jax.random.key(9)
+    p, l = 10, 16
+    for doc in (0, 3, 1000):
+        dk = jax.random.fold_in(key, doc)
+        kd = tf3.fold_in_data(tf3.key_data(key), jnp.uint32(doc))
+        np.testing.assert_array_equal(np.asarray(kd), _kd(dk))
+        for pos in (0, 1, l - 1):
+            k_rs, k_dr = jax.random.split(jax.random.fold_in(dk, pos))
+            kd_n = tf3.fold_in_data(kd, jnp.uint32(pos))
+            rs_d, dr_d = tf3.split2_data(kd_n)
+            u_rs = np.asarray(jax.random.uniform(k_rs, (p, l)))
+            u_dr = np.asarray(jax.random.uniform(k_dr, (p,)))
+            np.testing.assert_array_equal(
+                np.asarray(tf3.uniform_halves(dr_d, p)), u_dr)
+            for i in (0, pos, l - 1):
+                np.testing.assert_array_equal(
+                    np.asarray(tf3.uniform_column(rs_d, p, l,
+                                                  jnp.int32(i))),
+                    u_rs[:, i])
