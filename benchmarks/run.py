@@ -95,6 +95,14 @@ def main(argv=None):
     sections.append("eval")
 
     print("=" * 72)
+    print("serve: continuous-batching topic inference vs naive per-request")
+    print("=" * 72)
+    from benchmarks import serve_bench
+    serve_bench.main([] if args.scale == "paper"
+                     else ["--regimes", "paper"])
+    sections.append("serve")
+
+    print("=" * 72)
     print("gossip vs all-reduce collective bytes (model)")
     print("=" * 72)
     from benchmarks import gossip_collectives

@@ -76,11 +76,24 @@ def restore_checkpoint(directory: str, like, step: Optional[int] = None):
     path = os.path.join(directory, f"step_{step:08d}", "state.npz")
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = ["/".join(_path_str(p) for p in path_elems)
+            for path_elems, _ in paths]
+    missing = [k for k in keys
+               if k not in data and k + ".__bf16__" not in data]
+    if missing:
+        stored = {k.removesuffix(".__bf16__") for k in data.files}
+        unexpected = sorted(stored - set(keys))
+        raise ValueError(
+            f"checkpoint {path} does not match the `like` structure: "
+            f"missing keys {missing}"
+            + (f"; unexpected stored keys {unexpected}" if unexpected
+               else ""))
     leaves = []
-    import ml_dtypes
-    for path_elems, leaf in paths:
-        key = "/".join(_path_str(p) for p in path_elems)
+    for key, (_, leaf) in zip(keys, paths):
         if key + ".__bf16__" in data:
+            # lazy: ml_dtypes is only needed to view bf16 leaves, so a
+            # float32-only checkpoint restores without the dependency
+            import ml_dtypes
             arr = data[key + ".__bf16__"].view(ml_dtypes.bfloat16)
         else:
             arr = data[key]

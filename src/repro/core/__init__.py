@@ -14,18 +14,20 @@ Layout:
   evaluation.py     left-to-right held-out perplexity (Wallach et al. 2009)
   scenario.py       dynamic-network scenarios: time-varying graphs, message
                     drops, node churn, non-IID shards — all as schedule data
+  serving.py        topic-inference serving: continuous batching over length
+                    buckets + staleness-aware beta cache (ServingState)
 """
 
 from repro.core.lda import (LDAConfig, LDAState, beta_distance, eta_star,
-                            init_state, init_stats)
+                            eta_star_denom, init_state, init_stats)
 from repro.core.deleda import DeledaConfig, DeledaTrace, run_deleda
 from repro.core.decentralized import SyncSpec, parse_sync
 from repro.core.scenario import (CompiledScenario, GraphSequence, Scenario,
                                  paper_scenario)
 
 __all__ = [
-    "LDAConfig", "LDAState", "beta_distance", "eta_star", "init_state",
-    "init_stats", "DeledaConfig", "DeledaTrace", "run_deleda", "SyncSpec",
+    "LDAConfig", "LDAState", "beta_distance", "eta_star", "eta_star_denom",
+    "init_state", "init_stats", "DeledaConfig", "DeledaTrace", "run_deleda", "SyncSpec",
     "parse_sync", "CompiledScenario", "GraphSequence", "Scenario",
     "paper_scenario",
 ]

@@ -70,7 +70,8 @@ __all__ = [
     "gibbs_sweeps_dense", "gibbs_sweeps_sparse", "draw_gibbs_randoms",
     "stats_from_per_pos", "stats_from_unique", "dense_to_unique",
     "unique_view",
-    "count_nonempty", "beta_w_from_stats", "DenseEStep", "PallasEStep",
+    "count_nonempty", "beta_w_from_stats", "theta_slab", "DenseEStep",
+    "PallasEStep",
     "DenseSparseEStep", "PallasSparseEStep", "get_estep",
     "get_sparse_estep",
     "ESTEP_BACKENDS", "SPARSE_ESTEP_BACKENDS", "fused_sweeps",
@@ -329,8 +330,8 @@ def stats_from_per_pos(words: jax.Array, per_pos: jax.Array,
     return stats.at[:, flat_w].add(flat_p.T) / denom
 
 
-def beta_w_from_stats(stats: jax.Array, words: jax.Array,
-                      tau: float) -> jax.Array:
+def beta_w_from_stats(stats: jax.Array, words: jax.Array, tau: float,
+                      denom: jax.Array | None = None) -> jax.Array:
     """Likelihood rows beta[:, words] gathered straight from the statistic.
 
     The blocked-stats gather of the Scale layer: the E-step only ever
@@ -341,15 +342,57 @@ def beta_w_from_stats(stats: jax.Array, words: jax.Array,
     bitwise-equal to ``jnp.take(eta_star(stats, tau).T, words, axis=0)``
     (gather-then-divide of the identical floats).
 
+    ``denom`` optionally supplies the [K] row normalizer precomputed by
+    ``lda.eta_star_denom`` (the serving layer's staleness-aware cache):
+    the per-request cost then drops to the pure column gather, with
+    bitwise-identical output since the cached reduction is the same op
+    on the same floats.
+
     stats: [K, V] or vocab-sharded [K, S, V/S] (trailing axes are flattened
     — the shard axis is a pure layout axis); words: [B, L] int32.
     Returns beta_w [B, L, K].
     """
     k = stats.shape[0]
     stats = stats.reshape(k, -1)
-    denom = (stats + tau).sum(-1)                         # [K]
+    if denom is None:
+        denom = (stats + tau).sum(-1)                     # [K]
     cols = jnp.moveaxis(stats[:, words], 0, -1)           # [B, L, K]
     return (cols + tau) / denom
+
+
+def theta_slab(key: jax.Array, doc_ids: jax.Array, beta_w: jax.Array,
+               maskf: jax.Array, *, alpha: float, n_sweeps: int,
+               burnin: int) -> jax.Array:
+    """Per-document posterior topic mixtures for one serving slab, [B, K].
+
+    The mixture-query entry point of the serving layer: a few collapsed
+    Gibbs sweeps over each document against fixed likelihood rows
+    ``beta_w`` [B, L, K], returning the posterior-mean proportions
+    ``theta = (mean_kept n_dk + alpha) / (n_d + alpha K)`` — the same
+    estimate :class:`GibbsResult.theta` reports for training minibatches.
+
+    Unlike the training front-end (whose uniforms are drawn for the whole
+    batch at once), every document's stream here is ``fold_in(key,
+    doc_id)``: the sweep core is elementwise/last-axis only, so a
+    document's theta is BITWISE invariant to which requests share its
+    slab, to arrival order and to queue depth — the serving twin of the
+    evaluation layer's chunk-invariance property (tests/test_serving.py).
+    """
+    b, l, k = beta_w.shape
+    keys_d = jax.vmap(lambda d: jax.random.fold_in(key, d))(doc_ids)
+
+    def draws(kd):
+        k_init, k_u = jax.random.split(kd)     # same split as the trainer
+        u = jax.random.uniform(k_u, (n_sweeps, l), beta_w.dtype)
+        z0 = jax.random.randint(k_init, (l,), 0, k, jnp.int32)
+        return u, z0
+
+    uniforms, z0 = jax.vmap(draws)(keys_d)     # [B, S, L], [B, L]
+    _per_pos, _z, ndk_mean = gibbs_sweeps_dense(
+        beta_w, maskf, jnp.moveaxis(uniforms, 0, 1), z0, alpha=alpha,
+        n_sweeps=n_sweeps, burnin=burnin)
+    theta = ndk_mean + alpha
+    return theta / theta.sum(-1, keepdims=True)
 
 
 # ----------------------------------------------------------------------------

@@ -66,6 +66,7 @@ __all__ = [
     "left_to_right_unique_from_beta_w", "left_to_right_fused",
     "left_to_right_unique_fused", "left_to_right_log_likelihood",
     "auto_chunk_docs", "evaluate_heldout", "heldout_lp_from_stats",
+    "ll_slab_from_beta", "ll_slab_from_stats",
     "log_perplexity", "log_perplexity_from_stats",
     "relative_perplexity_error",
 ]
@@ -452,19 +453,44 @@ def left_to_right_log_likelihood(key: jax.Array, words: jax.Array,
 
 
 @partial(jax.jit, static_argnames=("n_particles", "layout", "backend"))
-def _chunk_ll_from_stats(key, doc_ids, words, mask, stats, tau, alpha,
-                         n_particles, layout="dense", backend="fused"):
-    beta_w = estep_mod.beta_w_from_stats(stats, words, tau)
+def ll_slab_from_stats(key, doc_ids, words, mask, stats, tau, alpha,
+                       n_particles=10, layout="dense", backend="fused",
+                       denom=None):
+    """[C] per-document LLs for ONE fixed-shape slab, beta from stats.
+
+    The serving layer's single-slab entry point (also the per-chunk body
+    of :func:`evaluate_heldout`): one jit trace per (C, L) slab shape,
+    per-document ``fold_in(key, doc_id)`` streams so a document's LL is
+    bitwise-independent of which requests share its slab. ``denom``
+    optionally passes the cached [K] row normalizer
+    (``lda.eta_star_denom`` via ``serving.ServingState``) so the hot
+    path skips the O(K*V) reduction — bitwise-identical output. stats
+    may be dense [K, V] or vocab-sharded [K, S, V/S].
+    """
+    beta_w = estep_mod.beta_w_from_stats(stats, words, tau, denom=denom)
     return _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
                            layout, backend)
 
 
 @partial(jax.jit, static_argnames=("n_particles", "layout", "backend"))
-def _chunk_ll_from_beta(key, doc_ids, words, mask, beta, alpha,
-                        n_particles, layout="dense", backend="fused"):
+def ll_slab_from_beta(key, doc_ids, words, mask, beta, alpha,
+                      n_particles=10, layout="dense", backend="fused"):
+    """[C] per-document LLs for ONE fixed-shape slab, dense [K, V] beta.
+
+    The dense-cache twin of :func:`ll_slab_from_stats`: serving keeps
+    ``eta_star(stats)`` materialized (``ServingState.beta()``) and each
+    slab is a pure column gather against it — bitwise-equal to the
+    stats path (gather-then-divide of identical floats, the
+    ``beta_w_from_stats`` contract).
+    """
     beta_w = jnp.take(beta.T, words, axis=0)
     return _ll_from_beta_w(key, doc_ids, beta_w, mask, alpha, n_particles,
                            layout, backend)
+
+
+# per-chunk bodies of evaluate_heldout (older internal names)
+_chunk_ll_from_stats = ll_slab_from_stats
+_chunk_ll_from_beta = ll_slab_from_beta
 
 
 _CHUNK_BUDGET_BYTES = 64 << 20     # default live-footprint target

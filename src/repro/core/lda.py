@@ -73,19 +73,55 @@ def eta_star(stats: jax.Array, tau: float = 1e-2) -> jax.Array:
     return smoothed / smoothed.sum(axis=-1, keepdims=True)
 
 
-def log_eta_star(stats: jax.Array, tau: float = 1e-2) -> jax.Array:
-    """log eta*(s), computed stably."""
+def eta_star_denom(stats: jax.Array, tau: float = 1e-2) -> jax.Array:
+    """The M-step row normalizer sum_v (s[k, v] + tau) as a [K] vector.
+
+    The only O(K*V) reduction in :func:`eta_star` / :func:`log_eta_star` /
+    ``estep.beta_w_from_stats`` — the piece worth caching across serving
+    requests: with the denominator in hand, answering a query against a
+    (possibly vocab-sharded [K, S, V/S]) statistic is a pure O(B*L*K)
+    column gather. Same reduction op as ``eta_star``'s row sum, so
+    dividing by a cached denominator reproduces the fresh computation
+    bitwise (asserted in tests/test_serving.py).
+
+    stats: [K, V] or vocab-sharded [K, S, V/S] (trailing axes flattened,
+    matching ``beta_w_from_stats``).
+    """
+    k = stats.shape[0]
+    return (stats.reshape(k, -1) + tau).sum(-1)
+
+
+def log_eta_star(stats: jax.Array, tau: float = 1e-2,
+                 denom: Optional[jax.Array] = None) -> jax.Array:
+    """log eta*(s), computed stably.
+
+    ``denom`` optionally supplies the precomputed [K] row normalizer
+    (:func:`eta_star_denom`) so a cached serving path skips the O(K*V)
+    reduction; requires 2-D [K, V] stats and is bitwise-identical to the
+    denom-free call (same floats into the same log).
+    """
     smoothed = stats + tau
-    return jnp.log(smoothed) - jnp.log(smoothed.sum(axis=-1, keepdims=True))
+    if denom is None:
+        return jnp.log(smoothed) - jnp.log(
+            smoothed.sum(axis=-1, keepdims=True))
+    return jnp.log(smoothed) - jnp.log(denom)[:, None]
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class LDAState:
-    """Carried inference state of one (centralized) G-OEM learner."""
+    """Carried inference state of one (centralized) G-OEM learner.
+
+    ``stats_version`` is a monotonic counter bumped every time ``stats``
+    changes (each ``oem_update``): the serving layer's staleness
+    protocol — a cached ``eta_star`` derivation is valid exactly while
+    the version it was derived at matches (``serving.ServingState``).
+    """
 
     stats: jax.Array               # [K, V] sufficient statistics s
     step: jax.Array                # scalar int32 iteration counter
+    stats_version: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32))
 
     def beta(self, tau: float = 1e-2) -> jax.Array:
         return eta_star(self.stats, tau)

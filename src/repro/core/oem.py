@@ -58,7 +58,8 @@ def oem_update(config: LDAConfig, state: LDAState, key: jax.Array,
     result = estep(config, key, words, mask, beta)
     rho = rho_fn(t).astype(state.stats.dtype)
     new_stats = (1.0 - rho) * state.stats + rho * result.stats
-    return LDAState(stats=new_stats, step=t)
+    return LDAState(stats=new_stats, step=t,
+                    stats_version=state.stats_version + 1)
 
 
 class OEMTrace(NamedTuple):

@@ -1,0 +1,427 @@
+"""Serving layer: node-local topic inference at high request throughput.
+
+The paper's end state is that every node can answer topic queries
+*locally* — the raw corpus never leaves the graph, only sufficient
+statistics gossip (Campbell & How's point in arXiv:1403.7471: a per-node
+posterior is only useful if the node can serve approximate inference
+from its local statistic). This module is the online half of that story,
+next to the offline training layers (comm/estep/scenario/scale/eval —
+DESIGN.md section 10):
+
+* **ServingState** — the staleness-aware beta cache. A node's statistic
+  changes only when a gossip round lands; everything a query needs from
+  it (the dense ``eta_star`` topic matrix, the [K] row normalizer
+  ``lda.eta_star_denom``, ``log_eta_star``) is derived *lazily* on first
+  use and cached against a monotonic ``stats_version``. ``publish()`` is
+  how a gossip round lands: it installs the new statistic and bumps the
+  version, so the next access re-derives — the hot path never recomputes
+  the normalizer per request AND can never serve a silently stale
+  mixture. A cache hit is bitwise-identical to a fresh recompute
+  (same reduction op on the same floats; asserted in
+  tests/test_serving.py). Vocab-sharded ``[K, S, V/S]`` statistics are
+  served directly through the cached-denominator ``beta_w_from_stats``
+  gather — no dense beta is ever materialized.
+
+* **TopicServer** — continuous batching of variable-length inference
+  requests into the existing fused position-major evaluation grid
+  (``evaluation.EVAL_BACKENDS`` / ``estep.theta_slab``). An admission
+  queue buckets requests by document length into 2–3 fixed ``[C, L_b]``
+  slabs (``make_buckets``; slab size from ``evaluation.auto_chunk_docs``)
+  so the server compiles ONE trace per (bucket, query-kind) and
+  requests/sec scales with slab occupancy instead of with XLA's
+  compile cache. Two query types: ``"ll"`` (per-document left-to-right
+  log-likelihood, the held-out evaluator's estimate) and ``"mixture"``
+  (the ``(n_dk + alpha) / (n_d + alpha K)`` posterior topic proportions
+  from a few Gibbs sweeps).
+
+Bitwise contracts (the serving extension of the evaluation layer's
+chunk-invariance): a document's answer depends only on ``(key, doc_id,
+its bucket length)`` — never on arrival order, queue depth, or which
+requests share its slab — and the ``"ll"`` answer equals
+``evaluate_heldout`` on the same documents padded to the same bucket
+length, float for float.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estep as estep_mod
+from repro.core import evaluation as eval_mod
+from repro.core import lda as lda_mod
+
+__all__ = [
+    "QUERY_KINDS", "ServeRequest", "ServeResult", "ServingState",
+    "TopicServer", "make_buckets",
+]
+
+QUERY_KINDS = ("ll", "mixture")
+
+
+def make_buckets(doc_len_max: int, n_buckets: int = 3) -> tuple[int, ...]:
+    """Ascending length-bucket ladder, largest bucket == doc_len_max.
+
+    A halving ladder (e.g. L=64, 3 buckets -> (16, 32, 64)) with a floor
+    of 4 positions: short queries pay a short position scan instead of
+    the full doc_len_max one, while the trace count stays O(n_buckets).
+    A document lands in the SMALLEST bucket that fits it — a pure
+    function of its length, so the bucket (and therefore every bit of
+    the answer) is independent of server load.
+    """
+    if n_buckets < 1:
+        raise ValueError(f"n_buckets must be >= 1, got {n_buckets}")
+    if doc_len_max < 1:
+        raise ValueError(f"doc_len_max must be >= 1, got {doc_len_max}")
+    ladder = [int(doc_len_max)]
+    while len(ladder) < n_buckets and ladder[-1] > 4:
+        nxt = max(4, -(-ladder[-1] // 2))
+        if nxt == ladder[-1]:
+            break
+        ladder.append(nxt)
+    return tuple(sorted(ladder))
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One admitted inference request (internal queue entry)."""
+
+    req_id: int
+    doc_id: int
+    kind: str                  # "ll" | "mixture"
+    words: np.ndarray          # [n_tokens] int32, unpadded
+    n_tokens: int
+    bucket: int                # L_b the request was admitted into
+    t_submit: float            # host clock at admission
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One answered request.
+
+    ``value`` is a float LL for ``kind == "ll"`` and a [K] numpy array of
+    posterior topic proportions for ``kind == "mixture"``.
+    """
+
+    req_id: int
+    doc_id: int
+    kind: str
+    value: np.ndarray | float
+    bucket: int
+    stats_version: int         # version of the statistic that answered
+    t_submit: float
+    t_done: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class ServingState:
+    """Staleness-aware cache of the M-step derivations over one statistic.
+
+    Protocol: ``stats_version`` is monotonic. ``publish(new_stats)`` is
+    the gossip-round hook — it installs the statistic and bumps the
+    version (explicit versions must strictly increase, so replayed or
+    reordered rounds are rejected loudly). Derived quantities are
+    computed lazily on first access after a publish and cached; every
+    accessor re-checks the version, so a hit returns exactly the bits a
+    fresh recompute would (``lda.eta_star_denom`` / ``lda.eta_star`` /
+    ``lda.log_eta_star`` on the current floats — asserted bitwise in
+    tests/test_serving.py).
+
+    stats: dense ``[K, V]`` or vocab-sharded ``[K, S, V/S]``. In the
+    sharded layout no dense beta is ever materialized — queries go
+    through the cached-denominator ``estep.beta_w_from_stats`` gather.
+    """
+
+    def __init__(self, stats: jax.Array, *, tau: float = 1e-2,
+                 version: int = 0):
+        stats = jnp.asarray(stats)
+        if stats.ndim not in (2, 3):
+            raise ValueError(
+                f"stats must be [K, V] or [K, S, V/S], got {stats.shape}")
+        self._stats = stats
+        self.tau = float(tau)
+        self._version = int(version)
+        self._derived_at: int | None = None
+        self._denom = None
+        self._beta = None
+        self._log_beta = None
+        self.n_derivations = 0     # cache diagnostic (tests/bench)
+
+    @property
+    def stats(self) -> jax.Array:
+        return self._stats
+
+    @property
+    def stats_version(self) -> int:
+        return self._version
+
+    @property
+    def sharded(self) -> bool:
+        return self._stats.ndim == 3
+
+    @property
+    def n_topics(self) -> int:
+        return self._stats.shape[0]
+
+    def publish(self, stats: jax.Array, *, version: int | None = None):
+        """A gossip round landed: install ``stats``, bump the version.
+
+        The cache is NOT eagerly recomputed — it is invalidated by the
+        version bump and re-derived lazily by the next query, so a burst
+        of gossip rounds between requests costs one derivation, not one
+        per round.
+        """
+        stats = jnp.asarray(stats)
+        if stats.shape != self._stats.shape:
+            raise ValueError(
+                f"published stats shape {stats.shape} != serving shape "
+                f"{self._stats.shape}")
+        new_version = self._version + 1 if version is None else int(version)
+        if new_version <= self._version:
+            raise ValueError(
+                f"stats_version must be monotonic: got {new_version}, "
+                f"currently at {self._version}")
+        self._stats = stats
+        self._version = new_version
+
+    def _ensure(self):
+        if self._derived_at != self._version:
+            self._denom = lda_mod.eta_star_denom(self._stats, self.tau)
+            self._beta = (None if self.sharded
+                          else lda_mod.eta_star(self._stats, self.tau))
+            self._log_beta = None
+            self._derived_at = self._version
+            self.n_derivations += 1
+
+    def denom(self) -> jax.Array:
+        """Cached [K] M-step row normalizer (``lda.eta_star_denom``)."""
+        self._ensure()
+        return self._denom
+
+    def beta(self) -> jax.Array:
+        """Cached dense ``eta_star(stats)`` topic matrix ([K, V] only)."""
+        if self.sharded:
+            raise ValueError(
+                "no dense beta is materialized for vocab-sharded stats; "
+                "serve through beta_w()/denom() instead")
+        self._ensure()
+        return self._beta
+
+    def log_eta_star(self) -> jax.Array:
+        """Cached ``log eta_star(stats)`` over the flattened vocab axis."""
+        self._ensure()
+        if self._log_beta is None:
+            k = self._stats.shape[0]
+            self._log_beta = lda_mod.log_eta_star(
+                self._stats.reshape(k, -1), self.tau, denom=self._denom)
+        return self._log_beta
+
+    def beta_w(self, words: jax.Array) -> jax.Array:
+        """Likelihood rows beta[:, words] via the cached normalizer."""
+        self._ensure()
+        return estep_mod.beta_w_from_stats(self._stats, words, self.tau,
+                                           denom=self._denom)
+
+
+# ---------------------------------------------------------------------------
+# Slab kernels: one jit trace per (bucket shape, query kind, beta source)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_sweeps", "burnin"))
+def _mixture_slab_from_beta(key, doc_ids, words, mask, beta, alpha,
+                            n_sweeps, burnin):
+    beta_w = jnp.take(beta.T, words, axis=0)
+    return estep_mod.theta_slab(key, doc_ids, beta_w,
+                                mask.astype(beta_w.dtype), alpha=alpha,
+                                n_sweeps=n_sweeps, burnin=burnin)
+
+
+@partial(jax.jit, static_argnames=("n_sweeps", "burnin"))
+def _mixture_slab_from_stats(key, doc_ids, words, mask, stats, denom, tau,
+                             alpha, n_sweeps, burnin):
+    beta_w = estep_mod.beta_w_from_stats(stats, words, tau, denom=denom)
+    return estep_mod.theta_slab(key, doc_ids, beta_w,
+                                mask.astype(beta_w.dtype), alpha=alpha,
+                                n_sweeps=n_sweeps, burnin=burnin)
+
+
+class TopicServer:
+    """Continuous batching of topic-inference requests over one node.
+
+    ``submit()`` admits a request into the length bucket that fits it;
+    ``step()`` packs the deepest (bucket, kind) queue into one fixed
+    ``[C_b, L_b]`` slab — padding unfilled rows with empty documents,
+    exactly like :func:`evaluation.evaluate_heldout`'s padded tail
+    chunk — and dispatches it through the fused evaluation grid (or the
+    Gibbs mixture slab). ``drain()`` steps until the queue is empty.
+
+    Greedy, no batching timeout: an arriving request is served by the
+    next ``step()`` whether the slab fills or not, so latency at low
+    load is one slab service time and occupancy (and requests/sec)
+    climbs with offered load. One jit trace per (bucket, kind) pair —
+    2–3 buckets x 2 kinds total, compiled on first use.
+
+    PRNG contract: a request's stream is ``fold_in(key, doc_id)``
+    (doc_id defaults to the request id; pass stable ids for reproducible
+    estimates). Answers are bitwise-invariant to arrival order, queue
+    depth and slab composition, and ``"ll"`` answers equal
+    ``evaluate_heldout`` on the same documents at the bucket's padded
+    length.
+    """
+
+    def __init__(self, state: ServingState, *, alpha: float,
+                 key: jax.Array, doc_len_max: int,
+                 n_particles: int = 10, n_buckets: int = 3,
+                 slab_docs: int | None = None, max_slab_docs: int = 64,
+                 mixture_sweeps: int = 8, mixture_burnin: int = 4,
+                 backend: str = "fused"):
+        if backend not in eval_mod.EVAL_BACKENDS:
+            raise ValueError(f"eval backend must be one of "
+                             f"{eval_mod.EVAL_BACKENDS}, got {backend!r}")
+        if not 0 <= mixture_burnin < mixture_sweeps:
+            raise ValueError(
+                f"need 0 <= mixture_burnin < mixture_sweeps, got "
+                f"{mixture_burnin} / {mixture_sweeps}")
+        self.state = state
+        self.alpha = float(alpha)
+        self.key = key
+        self.n_particles = int(n_particles)
+        self.backend = backend
+        self.mixture_sweeps = int(mixture_sweeps)
+        self.mixture_burnin = int(mixture_burnin)
+        self.buckets = make_buckets(doc_len_max, n_buckets)
+        k = state.n_topics
+        # slab capacity per bucket: explicit, or the eval layer's
+        # memory-budget auto-chunking capped at max_slab_docs (a slab is
+        # a latency unit — huge slabs trade p50 for throughput)
+        self.slab_docs = {
+            lb: (int(slab_docs) if slab_docs is not None else
+                 min(int(max_slab_docs),
+                     eval_mod.auto_chunk_docs(10 ** 9, lb,
+                                              self.n_particles, k)))
+            for lb in self.buckets
+        }
+        self._pending: dict[tuple[int, str], deque[ServeRequest]] = {
+            (lb, kind): deque() for lb in self.buckets
+            for kind in QUERY_KINDS
+        }
+        self._next_id = 0
+        # telemetry: slab count, occupancy, served requests
+        self.n_slabs = 0
+        self.n_served = 0
+        self._occupancy_sum = 0.0
+
+    # -- admission ---------------------------------------------------------
+
+    def bucket_for(self, n_tokens: int) -> int:
+        """Smallest bucket length >= n_tokens (admission policy)."""
+        for lb in self.buckets:
+            if n_tokens <= lb:
+                return lb
+        raise ValueError(
+            f"document of {n_tokens} tokens exceeds the largest bucket "
+            f"({self.buckets[-1]}); raise doc_len_max/n_buckets or split "
+            f"the document")
+
+    def submit(self, words, *, kind: str = "ll",
+               doc_id: int | None = None) -> int:
+        """Admit one document (1-D int32 token ids). Returns request id."""
+        if kind not in QUERY_KINDS:
+            raise ValueError(
+                f"query kind must be one of {QUERY_KINDS}, got {kind!r}")
+        words = np.asarray(words, np.int32).reshape(-1)
+        if words.size == 0:
+            raise ValueError("cannot serve an empty document")
+        bucket = self.bucket_for(words.size)
+        rid = self._next_id
+        self._next_id += 1
+        req = ServeRequest(
+            req_id=rid, doc_id=int(rid if doc_id is None else doc_id),
+            kind=kind, words=words, n_tokens=int(words.size),
+            bucket=bucket, t_submit=time.perf_counter())
+        self._pending[(bucket, kind)].append(req)
+        return rid
+
+    def pending_count(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean slab fill fraction over all dispatched slabs."""
+        return (self._occupancy_sum / self.n_slabs) if self.n_slabs else 0.0
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _pack(self, reqs: list[ServeRequest], lb: int, c: int):
+        words = np.zeros((c, lb), np.int32)
+        mask = np.zeros((c, lb), bool)
+        doc_ids = np.zeros((c,), np.int32)
+        for i, r in enumerate(reqs):
+            words[i, :r.n_tokens] = r.words
+            mask[i, :r.n_tokens] = True
+            doc_ids[i] = r.doc_id
+        return jnp.asarray(doc_ids), jnp.asarray(words), jnp.asarray(mask)
+
+    def _run_slab(self, kind: str, doc_ids, words, mask):
+        st = self.state
+        if kind == "ll":
+            if st.sharded:
+                return eval_mod.ll_slab_from_stats(
+                    self.key, doc_ids, words, mask, st.stats, st.tau,
+                    self.alpha, self.n_particles, "dense", self.backend,
+                    denom=st.denom())
+            return eval_mod.ll_slab_from_beta(
+                self.key, doc_ids, words, mask, st.beta(), self.alpha,
+                self.n_particles, "dense", self.backend)
+        if st.sharded:
+            return _mixture_slab_from_stats(
+                self.key, doc_ids, words, mask, st.stats, st.denom(),
+                st.tau, self.alpha, self.mixture_sweeps,
+                self.mixture_burnin)
+        return _mixture_slab_from_beta(
+            self.key, doc_ids, words, mask, st.beta(), self.alpha,
+            self.mixture_sweeps, self.mixture_burnin)
+
+    def step(self) -> list[ServeResult]:
+        """Dispatch ONE slab from the deepest queue; [] if nothing waits."""
+        depth, chosen = 0, None
+        for qk, q in self._pending.items():     # deepest queue; ties ->
+            if len(q) > depth:                  # smallest bucket first
+                depth, chosen = len(q), qk
+        if chosen is None:
+            return []
+        lb, kind = chosen
+        c = self.slab_docs[lb]
+        q = self._pending[chosen]
+        reqs = [q.popleft() for _ in range(min(c, len(q)))]
+        doc_ids, words, mask = self._pack(reqs, lb, c)
+        version = self.state.stats_version    # pinned before dispatch
+        out = np.asarray(self._run_slab(kind, doc_ids, words, mask))
+        t_done = time.perf_counter()
+        self.n_slabs += 1
+        self._occupancy_sum += len(reqs) / c
+        self.n_served += len(reqs)
+        results = []
+        for i, r in enumerate(reqs):
+            value = float(out[i]) if kind == "ll" else out[i].copy()
+            results.append(ServeResult(
+                req_id=r.req_id, doc_id=r.doc_id, kind=kind, value=value,
+                bucket=lb, stats_version=version, t_submit=r.t_submit,
+                t_done=t_done))
+        return results
+
+    def drain(self) -> list[ServeResult]:
+        """Serve until the admission queue is empty."""
+        results = []
+        while self.pending_count():
+            results.extend(self.step())
+        return results

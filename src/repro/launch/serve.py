@@ -23,6 +23,19 @@ from repro.models import frontends as fe
 from repro.models import transformer as tf
 
 
+_JITTED_STEPS: dict = {}
+
+
+def _jitted_step(step):
+    """jit each decode step ONCE per process, at stable function identity
+    (step fns are module-level, cfg is a frozen hashable config), so the
+    compile cache is shared across generate() calls instead of retracing
+    through a fresh per-call lambda."""
+    if step not in _JITTED_STEPS:
+        _JITTED_STEPS[step] = jax.jit(step, static_argnums=0)
+    return _JITTED_STEPS[step]
+
+
 def generate(cfg, params, prompt: jax.Array, gen_len: int,
              frames=None) -> tuple[jax.Array, dict]:
     """Greedy decode. prompt [B, S0] -> tokens [B, S0+gen_len]."""
@@ -36,25 +49,29 @@ def generate(cfg, params, prompt: jax.Array, gen_len: int,
         caches = tf.init_caches(cfg, b, max_len)
         step = tf.decode_step
 
-    jitted = jax.jit(lambda p, t, c, i: step(cfg, p, t, c, i))
+    jitted = _jitted_step(step)
 
     # prefill via the decode path one token at a time would be wasteful on
     # real hardware; here prefill = teacher-forcing the prompt through the
     # cached step (exercises exactly the serving cache path).
+    jax.block_until_ready((params, prompt))
     t0 = time.time()
     tokens = prompt
     out = None
     for i in range(s0):
-        out = jitted(params, tokens[:, i:i + 1], caches,
+        out = jitted(cfg, params, tokens[:, i:i + 1], caches,
                      jnp.asarray(i, jnp.int32))
         caches = out.caches
+    # async dispatch: without this barrier the timer reads queueing time,
+    # not prefill time
+    jax.block_until_ready(out.logits)
     prefill_sec = time.time() - t0
 
     t0 = time.time()
     cur = jnp.argmax(out.logits[:, -1], -1)[:, None].astype(jnp.int32)
     generated = [cur]
     for i in range(s0, max_len - 1):
-        out = jitted(params, cur, caches, jnp.asarray(i, jnp.int32))
+        out = jitted(cfg, params, cur, caches, jnp.asarray(i, jnp.int32))
         caches = out.caches
         cur = jnp.argmax(out.logits[:, -1], -1)[:, None].astype(jnp.int32)
         generated.append(cur)

@@ -77,3 +77,42 @@ def test_checkpoint_multiple_steps(tmp_path):
     assert latest_step(str(tmp_path)) == 5
     out = restore_checkpoint(str(tmp_path), tree)
     np.testing.assert_array_equal(np.asarray(out["x"]), [1.0, 1.0])
+
+
+def test_restore_missing_key_raises_descriptive_error(tmp_path):
+    """A structure mismatch must name the missing/unexpected keys, not
+    die with a bare KeyError on the first absent leaf."""
+    save_checkpoint(str(tmp_path), {"x": jnp.zeros((2,))}, step=1)
+    like = {"x": jnp.zeros((2,)), "y": {"z": jnp.zeros((3,))}}
+    with pytest.raises(ValueError, match=r"missing keys \['y/z'\]"):
+        restore_checkpoint(str(tmp_path), like)
+    with pytest.raises(ValueError, match=r"unexpected stored keys \['x'\]"):
+        restore_checkpoint(str(tmp_path), {"w": jnp.zeros((2,))})
+
+
+def test_restore_float32_without_ml_dtypes(tmp_path, monkeypatch):
+    """ml_dtypes is only needed for bf16 leaves: a float32-only
+    checkpoint must restore even when the module is unimportable."""
+    import builtins
+    import sys
+    tree = {"w": jnp.arange(6.0).reshape(2, 3)}
+    save_checkpoint(str(tmp_path), tree, step=1)
+    monkeypatch.delitem(sys.modules, "ml_dtypes", raising=False)
+    real_import = builtins.__import__
+
+    def no_ml_dtypes(name, *a, **kw):
+        if name == "ml_dtypes":
+            raise ImportError("ml_dtypes unavailable (test)")
+        return real_import(name, *a, **kw)
+
+    monkeypatch.setattr(builtins, "__import__", no_ml_dtypes)
+    out = restore_checkpoint(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+
+    # ...but a checkpoint that DOES hold bf16 leaves still needs it
+    save_checkpoint(str(tmp_path), {"w": jnp.ones((2,), jnp.bfloat16)},
+                    step=2)
+    with pytest.raises(ImportError, match="ml_dtypes"):
+        restore_checkpoint(str(tmp_path),
+                           {"w": jnp.ones((2,), jnp.bfloat16)}, step=2)

@@ -1,0 +1,54 @@
+"""Serve-launcher timing regression: reported phase times must be real.
+
+The bug: ``generate()`` read ``prefill_sec`` without
+``jax.block_until_ready``, so with jax's async dispatch the "prefill
+time" was mostly enqueue time — near-constant in the prompt length —
+and the decode timer then absorbed the un-awaited prefill work. Fixed
+by a barrier before each timer read (and a process-wide jit cache so
+repeated calls don't re-trace through a fresh lambda). The regression
+check: prefill time must GROW with the prompt length, which the
+unblocked timer does not satisfy.
+"""
+
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.launch import serve
+from repro.models import transformer as tf
+
+SHORT, LONG = 4, 48
+
+
+@pytest.mark.slow
+def test_prefill_time_grows_with_prompt_len():
+    cfg = smoke_variant(get_config("gemma2_2b"))
+    key = jax.random.key(0)
+    params = tf.init_decoder_lm(cfg, key)
+
+    def prefill_sec(prompt_len):
+        prompt = jax.random.randint(key, (2, prompt_len), 0,
+                                    cfg.vocab_size, jax.numpy.int32)
+        _, stats = serve.generate(cfg, params, prompt, gen_len=2)
+        return stats["prefill_sec"]
+
+    prefill_sec(LONG)                       # warm the shared jit cache
+    short = min(prefill_sec(SHORT) for _ in range(2))
+    long = min(prefill_sec(LONG) for _ in range(2))
+    # 12x the steps; demand a loose 2x so the check is noise-tolerant but
+    # still fails the async-dispatch bug (which reports near-equal times)
+    assert long > 2.0 * short, (short, long)
+
+
+def test_jit_cache_is_shared_across_generate_calls():
+    cfg = smoke_variant(get_config("gemma2_2b"))
+    serve._JITTED_STEPS.clear()
+    key = jax.random.key(0)
+    params = tf.init_decoder_lm(cfg, key)
+    prompt = jax.random.randint(key, (1, 4), 0, cfg.vocab_size,
+                                jax.numpy.int32)
+    serve.generate(cfg, params, prompt, gen_len=2)
+    jitted = serve._JITTED_STEPS[tf.decode_step]
+    serve.generate(cfg, params, prompt, gen_len=2)
+    assert serve._JITTED_STEPS[tf.decode_step] is jitted
+    assert len(serve._JITTED_STEPS) == 1

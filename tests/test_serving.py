@@ -1,0 +1,344 @@
+"""Serving layer: staleness-aware cache + continuous-batching contracts.
+
+The load-bearing assertions are all bitwise:
+
+* a cached ServingState derivation equals a fresh recompute
+  (``eta_star`` / ``eta_star_denom`` / ``log_eta_star`` on the same
+  floats);
+* a server's "ll" answers equal ``evaluate_heldout`` on the same
+  documents at the bucket's padded length;
+* answers are invariant to arrival order, queue depth and slab
+  composition (a doc served alone == served packed);
+* answers after a gossip ``publish()`` equal a fresh evaluation of the
+  NEW statistic (no stale bits survive the version bump), and the
+  vocab-sharded stats path equals the dense cached-beta path.
+
+Admission policy edges (empty doc, oversized doc, empty queue, bucket
+ladder) are covered as plain behavioral tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import serving
+from repro.core.evaluation import (evaluate_heldout,
+                                   left_to_right_log_likelihood)
+from repro.core.lda import (LDAConfig, eta_star, eta_star_denom, init_state,
+                            log_eta_star)
+from repro.core.oem import make_rho_schedule, oem_update
+from repro.core.serving import ServingState, TopicServer, make_buckets
+from repro.data.lda_synthetic import CorpusSpec, make_corpus
+
+CFG = LDAConfig(n_topics=4, vocab_size=30, alpha=0.5, doc_len_max=12,
+                n_gibbs=6, n_gibbs_burnin=3)
+KEY = jax.random.key(42)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CFG, jax.random.key(0),
+                       CorpusSpec(n_nodes=2, docs_per_node=5, n_test=16))
+
+
+@pytest.fixture(scope="module")
+def stats(corpus):
+    # a lightly-trained statistic (not beta*: serving must work off any s)
+    state = init_state(CFG, jax.random.key(3))
+    rho = make_rho_schedule("constant", constant=0.3)
+    for i in range(3):
+        state = oem_update(CFG, state, jax.random.fold_in(KEY, i),
+                           corpus.flat_words[:8], corpus.flat_mask[:8], rho)
+    return state.stats
+
+
+def _server(stats_or_state, **kw):
+    st = (stats_or_state if isinstance(stats_or_state, ServingState)
+          else ServingState(stats_or_state, tau=CFG.tau))
+    kw.setdefault("n_particles", 4)
+    kw.setdefault("slab_docs", 6)
+    return TopicServer(st, alpha=CFG.alpha, key=KEY,
+                       doc_len_max=CFG.doc_len_max, **kw)
+
+
+def _by_doc(results):
+    return {r.doc_id: r.value for r in results}
+
+
+def _trimmed(corpus, i):
+    n = int(np.asarray(corpus.test_mask[i]).sum())
+    return np.asarray(corpus.test_words[i, :max(n, 1)])
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder + admission policy
+# ---------------------------------------------------------------------------
+
+def test_make_buckets_ladder():
+    assert make_buckets(64, 3) == (16, 32, 64)
+    assert make_buckets(12, 3) == (4, 6, 12)
+    assert make_buckets(64, 1) == (64,)
+    assert make_buckets(4, 3) == (4,)          # floor stops the ladder
+    assert make_buckets(5, 5) == (4, 5)        # no duplicate rungs
+    with pytest.raises(ValueError):
+        make_buckets(64, 0)
+    with pytest.raises(ValueError):
+        make_buckets(0, 2)
+
+
+def test_bucket_for_is_smallest_fit(stats):
+    srv = _server(stats, n_buckets=3)
+    assert srv.buckets == (4, 6, 12)
+    assert srv.bucket_for(1) == 4
+    assert srv.bucket_for(4) == 4
+    assert srv.bucket_for(5) == 6
+    assert srv.bucket_for(12) == 12
+
+
+def test_admission_rejects_empty_and_oversized(stats):
+    srv = _server(stats)
+    with pytest.raises(ValueError, match="empty"):
+        srv.submit(np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        srv.submit(np.zeros((CFG.doc_len_max + 1,), np.int32))
+    with pytest.raises(ValueError, match="kind"):
+        srv.submit(np.zeros((3,), np.int32), kind="perplexity")
+    assert srv.pending_count() == 0
+
+
+def test_empty_queue_step_is_noop(stats):
+    srv = _server(stats)
+    assert srv.step() == []
+    assert srv.drain() == []
+    assert srv.n_slabs == 0
+
+
+# ---------------------------------------------------------------------------
+# ServingState cache: hit == recompute, bitwise; versioning protocol
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_is_bitwise_recompute(stats):
+    st = ServingState(stats, tau=CFG.tau)
+    np.testing.assert_array_equal(np.asarray(st.denom()),
+                                  np.asarray(eta_star_denom(stats, CFG.tau)))
+    np.testing.assert_array_equal(np.asarray(st.beta()),
+                                  np.asarray(eta_star(stats, CFG.tau)))
+    np.testing.assert_array_equal(np.asarray(st.log_eta_star()),
+                                  np.asarray(log_eta_star(stats, CFG.tau)))
+    # second access is a hit (no new derivation) and returns the same bits
+    n = st.n_derivations
+    np.testing.assert_array_equal(np.asarray(st.beta()),
+                                  np.asarray(eta_star(stats, CFG.tau)))
+    assert st.n_derivations == n == 1
+
+
+def test_cache_invalidation_is_lazy_and_versioned(stats):
+    st = ServingState(stats, tau=CFG.tau, version=5)
+    st.denom()
+    assert (st.stats_version, st.n_derivations) == (5, 1)
+    st.publish(stats * 2.0)
+    st.publish(stats * 3.0)                    # burst: still no derivation
+    assert (st.stats_version, st.n_derivations) == (7, 1)
+    np.testing.assert_array_equal(
+        np.asarray(st.beta()), np.asarray(eta_star(stats * 3.0, CFG.tau)))
+    assert st.n_derivations == 2
+
+
+def test_publish_rejects_nonmonotonic_and_shape_mismatch(stats):
+    st = ServingState(stats, tau=CFG.tau, version=3)
+    with pytest.raises(ValueError, match="monotonic"):
+        st.publish(stats, version=3)
+    with pytest.raises(ValueError, match="monotonic"):
+        st.publish(stats, version=1)
+    with pytest.raises(ValueError, match="shape"):
+        st.publish(stats[:, :-1])
+    st.publish(stats, version=10)
+    assert st.stats_version == 10
+
+
+def test_sharded_state_never_materializes_beta(stats):
+    k, v = stats.shape
+    st = ServingState(stats.reshape(k, 2, v // 2), tau=CFG.tau)
+    assert st.sharded
+    with pytest.raises(ValueError, match="vocab-sharded"):
+        st.beta()
+    np.testing.assert_array_equal(np.asarray(st.denom()),
+                                  np.asarray(eta_star_denom(stats, CFG.tau)))
+    words = jnp.asarray([[0, 3, 7]], jnp.int32)
+    dense = ServingState(stats, tau=CFG.tau)
+    np.testing.assert_array_equal(
+        np.asarray(st.beta_w(words)),
+        np.asarray(jnp.take(eta_star(stats, CFG.tau).T, words, axis=0)))
+    np.testing.assert_array_equal(np.asarray(st.beta_w(words)),
+                                  np.asarray(dense.beta_w(words)))
+
+
+def test_lda_state_version_increments_per_update(corpus):
+    state = init_state(CFG, jax.random.key(3))
+    assert int(state.stats_version) == 0
+    rho = make_rho_schedule("constant", constant=0.3)
+    for i in range(2):
+        state = oem_update(CFG, state, jax.random.fold_in(KEY, i),
+                           corpus.flat_words[:4], corpus.flat_mask[:4], rho)
+    assert int(state.stats_version) == 2
+
+
+# ---------------------------------------------------------------------------
+# serving == evaluate_heldout, bitwise
+# ---------------------------------------------------------------------------
+
+def test_ll_matches_evaluate_heldout_bitwise(corpus, stats):
+    """Packed slab answers == the held-out evaluator, float for float.
+
+    All docs land in one bucket (single-bucket server), so the server's
+    padded length equals the evaluator's and doc_ids line up with the
+    evaluator's arange.
+    """
+    srv = _server(stats, n_buckets=1, slab_docs=5)
+    for i in range(12):
+        srv.submit(_trimmed(corpus, i), kind="ll", doc_id=i)
+    got = _by_doc(srv.drain())
+    want = evaluate_heldout(KEY, corpus.test_words[:12],
+                            corpus.test_mask[:12], stats=stats, tau=CFG.tau,
+                            alpha=CFG.alpha, n_particles=4)
+    np.testing.assert_array_equal(
+        np.asarray([got[i] for i in range(12)], np.float32),
+        np.asarray(want))
+
+
+def test_ll_matches_evaluate_heldout_per_bucket(corpus, stats):
+    """Multi-bucket server: each answer equals evaluate_heldout on the
+    same doc padded to ITS bucket length (the PRNG stream depends on the
+    padded length, so the reference must be sliced to match)."""
+    srv = _server(stats, n_buckets=3)
+    for i in range(12):
+        srv.submit(_trimmed(corpus, i), kind="ll", doc_id=i)
+    got = _by_doc(srv.drain())
+    lens = np.asarray(corpus.test_mask).sum(-1).astype(int)
+    for lb in srv.buckets:
+        ids = [i for i in range(12)
+               if srv.bucket_for(max(lens[i], 1)) == lb]
+        if not ids:
+            continue
+        want = left_to_right_log_likelihood(
+            KEY, corpus.test_words[jnp.asarray(ids), :lb],
+            corpus.test_mask[jnp.asarray(ids), :lb],
+            eta_star(stats, CFG.tau), CFG.alpha, n_particles=4,
+            doc_ids=jnp.asarray(ids, jnp.int32))
+        np.testing.assert_array_equal(
+            np.asarray([got[i] for i in ids], np.float32),
+            np.asarray(want))
+
+
+def test_packing_invariant_to_arrival_order_and_depth(corpus, stats):
+    """Same per-doc bits whether a doc arrives first or last, alone or
+    packed with strangers, at any queue depth."""
+    docs = {i: _trimmed(corpus, i) for i in range(8)}
+
+    def serve(order, extra_depth=0, kinds=("ll",)):
+        srv = _server(stats, n_buckets=2, slab_docs=3)
+        for j in range(extra_depth):       # strangers sharing the queue
+            srv.submit(docs[j % 4], kind="ll", doc_id=100 + j)
+        for i in order:
+            for kind in kinds:
+                srv.submit(docs[i], kind=kind, doc_id=i)
+        return {(r.doc_id, r.kind): r.value for r in srv.drain()
+                if r.doc_id < 100}
+
+    base = serve(range(8), kinds=("ll", "mixture"))
+    shuffled = serve([5, 2, 7, 0, 3, 6, 1, 4], extra_depth=5,
+                     kinds=("mixture", "ll"))
+    assert base.keys() == shuffled.keys()
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k], np.float32),
+                                      np.asarray(shuffled[k], np.float32))
+
+    # a doc served ALONE (slab mostly padding) gets the packed bits too
+    srv = _server(stats, n_buckets=2, slab_docs=3)
+    srv.submit(docs[5], kind="ll", doc_id=5)
+    (alone,) = srv.drain()
+    np.testing.assert_array_equal(np.float32(alone.value),
+                                  np.float32(base[(5, "ll")]))
+
+
+def test_stale_beta_consistency_after_gossip(corpus, stats):
+    """The regression the cache protocol exists for: after a gossip round
+    lands (publish), every answer must equal a FRESH evaluation of the
+    new statistic — bitwise — not the pre-gossip cache."""
+    st = ServingState(stats, tau=CFG.tau)
+    srv = _server(st, n_buckets=1, slab_docs=4)
+    for i in range(4):
+        srv.submit(_trimmed(corpus, i), kind="ll", doc_id=i)
+    before = _by_doc(srv.drain())
+
+    gossiped = 0.5 * (stats + jnp.roll(stats, 1, axis=0))
+    st.publish(gossiped)
+    for i in range(4):
+        srv.submit(_trimmed(corpus, i), kind="ll", doc_id=i)
+    after = srv.drain()
+
+    want_new = evaluate_heldout(KEY, corpus.test_words[:4],
+                                corpus.test_mask[:4], stats=gossiped,
+                                tau=CFG.tau, alpha=CFG.alpha, n_particles=4)
+    want_old = evaluate_heldout(KEY, corpus.test_words[:4],
+                                corpus.test_mask[:4], stats=stats,
+                                tau=CFG.tau, alpha=CFG.alpha, n_particles=4)
+    got = _by_doc(after)
+    np.testing.assert_array_equal(
+        np.asarray([got[i] for i in range(4)], np.float32),
+        np.asarray(want_new))
+    # the pre-publish answers really did use the old stats (and the two
+    # statistics genuinely disagree, so the assertion above has teeth)
+    np.testing.assert_array_equal(
+        np.asarray([before[i] for i in range(4)], np.float32),
+        np.asarray(want_old))
+    assert not np.array_equal(np.asarray(want_new), np.asarray(want_old))
+    assert {r.stats_version for r in after} == {1}
+
+
+def test_sharded_stats_serving_matches_dense(corpus, stats):
+    """[K, S, V/S] sharded statistic answers == dense cached-beta answers
+    for both query kinds (no dense beta ever materialized)."""
+    k, v = stats.shape
+    dense = _server(ServingState(stats, tau=CFG.tau), n_buckets=2)
+    shard = _server(ServingState(stats.reshape(k, 3, v // 3), tau=CFG.tau),
+                    n_buckets=2)
+    for srv in (dense, shard):
+        for i in range(6):
+            srv.submit(_trimmed(corpus, i), kind="ll", doc_id=i)
+            srv.submit(_trimmed(corpus, i), kind="mixture", doc_id=i)
+    a = {(r.doc_id, r.kind): r.value for r in dense.drain()}
+    b = {(r.doc_id, r.kind): r.value for r in shard.drain()}
+    assert a.keys() == b.keys()
+    for key in a:
+        np.testing.assert_array_equal(np.asarray(a[key], np.float32),
+                                      np.asarray(b[key], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# mixture queries + telemetry
+# ---------------------------------------------------------------------------
+
+def test_mixture_is_a_distribution(corpus, stats):
+    srv = _server(stats)
+    for i in range(5):
+        srv.submit(_trimmed(corpus, i), kind="mixture", doc_id=i)
+    results = srv.drain()
+    assert len(results) == 5
+    for r in results:
+        theta = np.asarray(r.value)
+        assert theta.shape == (CFG.n_topics,)
+        assert (theta > 0).all()
+        np.testing.assert_allclose(theta.sum(), 1.0, rtol=1e-5)
+
+
+def test_telemetry_and_latency(corpus, stats):
+    srv = _server(stats, n_buckets=1, slab_docs=4)
+    for i in range(6):
+        srv.submit(_trimmed(corpus, i), kind="ll", doc_id=i)
+    results = srv.drain()
+    assert srv.n_slabs == 2 and srv.n_served == 6
+    np.testing.assert_allclose(srv.mean_occupancy, (1.0 + 0.5) / 2)
+    assert all(r.latency_s > 0 for r in results)
+    assert all(r.bucket == CFG.doc_len_max for r in results)
