@@ -134,6 +134,8 @@ def run_experiment(scale: ExperimentScale, seed: int = 0,
                   corpus.flat_mask, n_steps=scale.n_steps,
                   batch_size=scale.batch_size,
                   record_every=scale.record_every)
+    # async dispatch: close the G-OEM wall before reading the timer
+    jax.block_until_ready(oem.stats_history)
     rel, dist = zip(*[eval_beta(s) for s in oem.stats_history])
     results["runs"]["goem"] = {"rel_perplexity": list(rel),
                                "beta_distance": list(dist),
@@ -161,6 +163,8 @@ def run_experiment(scale: ExperimentScale, seed: int = 0,
                                       degs, scale.n_steps,
                                       scale.record_every,
                                       eval_spec=eval_spec)
+            # async dispatch: close the run's wall before the timer reads
+            jax.block_until_ready(trace.stats)
             # per-checkpoint: average metric over probe nodes
             lp_probe = np.asarray(trace.eval_lp)    # [R, probe_nodes]
             rels = [float(v) for v in lp_probe.mean(axis=1) / lp_star - 1.0]

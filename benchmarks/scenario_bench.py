@@ -41,17 +41,18 @@ def main(argv=None):
     ap.add_argument("-o", "--out", default="BENCH_scenarios.json")
     args = ap.parse_args(argv)
 
+    from repro.analysis.trace_audit import CompileCounter
     from repro.core import deleda
     scale = get_scale(f"scenario_{args.scale}")
     # delta, not absolute: other benchmark sections (benchmarks/run.py)
     # may already have compiled run_deleda with different shapes/configs
-    cache_before = deleda.run_deleda._cache_size()
-    res = run_scenario_experiment(scale, seed=args.seed)
+    with CompileCounter(deleda.run_deleda) as cc:
+        res = run_scenario_experiment(scale, seed=args.seed)
     res["scale"] = args.scale
 
     # the whole sweep must have hit ONE compiled trace: same shapes, same
     # static config -> schedules/alive masks are data, not new programs
-    n_traces = deleda.run_deleda._cache_size() - cache_before
+    n_traces = cc.total
     res["run_deleda_compilations"] = n_traces
     print(f"\nrun_deleda compilations for the whole sweep: {n_traces}")
 

@@ -115,7 +115,9 @@ def _min_of(fn, iters):
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn()
+        # barrier: fn's returned arrays may still be in flight — without
+        # it the interval reads dispatch time, not compute time
+        jax.block_until_ready(fn())
         best = min(best, time.perf_counter() - t0)
     return best
 
@@ -207,7 +209,9 @@ def bench_regime(name: str, rg: dict) -> dict:
     t0 = time.perf_counter()
     submitted = 0
     while len(results) < n:
-        now = time.perf_counter() - t0
+        # open-loop pacing clock: intentionally host wall time, the
+        # Poisson arrivals must not wait on device work
+        now = time.perf_counter() - t0   # lint: allow(timer-no-barrier)
         while submitted < n and arrivals[submitted] <= now:
             srv.submit(words[submitted, :lens[submitted]],
                        doc_id=int(doc_ids[submitted]))

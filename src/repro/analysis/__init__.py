@@ -1,0 +1,22 @@
+"""Static-analysis subsystem: machine-checked repo invariants.
+
+Three independent passes, each importable on its own:
+
+- :mod:`repro.analysis.hlo` — collective parser over post-partitioning
+  HLO text (shared with the roofline layer).
+- :mod:`repro.analysis.trace_audit` — declarative per-entry-point
+  invariant specs (collective allow-lists, the privacy boundary on
+  doc-shaped buffers, peak-temp budgets) audited against lowered traces,
+  plus the :class:`CompileCounter` recompile guard.
+- :mod:`repro.analysis.prng_lint` — jaxpr key-derivation-graph lint
+  (key reuse, batch-position-dependent `split` streams).
+- :mod:`repro.analysis.source_lint` — AST rules for the repo's fixed
+  bug classes (unbarriered timers, unguarded optional imports,
+  per-call re-jit, deprecated knobs), behind
+  ``python -m repro.analysis.lint``.
+
+Only :mod:`source_lint`/:mod:`hlo` are jax-free; the trace/prng passes
+import jax lazily so the lint CLI stays cheap.
+"""
+
+from __future__ import annotations

@@ -1,0 +1,166 @@
+"""Collective-op parser over post-partitioning HLO text.
+
+`cost_analysis()` reports FLOPs and bytes but NOT collective traffic or
+placement, so both the roofline model and the invariant auditor scan the
+compiled module's text for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops. This module owns the parser; the
+roofline keeps its historical aggregate API (`parse_collectives`,
+`collective_bytes`) as thin wrappers, while the auditor consumes the
+per-op records (`parse_collective_ops`) — shapes, dtypes and replica
+groups per collective, which is what the privacy / axis-placement
+invariants need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_INT_DTYPES = frozenset(
+    d for d in _DTYPE_BYTES if d[0] in "su" or d == "pred")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# Post-optimization HLO prints shapes on the RESULT, operands by name:
+#   %all-reduce.67 = f32[2,64,256]{2,1,0} all-reduce(%bitcast.23), ...
+#   %ar.1 = (f32[8]{0}, f32[4]{0}) all-reduce(%a, %b), ...
+# The -start/-done async pair prints the payload on the -start line only,
+# so '-done(' lines intentionally do not match.
+_OP_RE = re.compile(
+    r"=\s*(?P<result>\([^()]*\)|[\w\[\]{},/* ]+?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+
+# replica_groups={{0,1},{2,3}} (literal) or the iota form [2,2]<=[4] with an
+# optional transposed source, e.g. replica_groups=[2,4]<=[4,2]T(1,0)
+_GROUPS_LITERAL_RE = re.compile(r"replica_groups=\{(\{[\d,{} ]*\})?\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(?P<dims>[\d,]+)\]<=\[(?P<src>[\d,]+)\]"
+    r"(?:T\((?P<perm>[\d,]+)\))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n * _DTYPE_BYTES[self.dtype]
+
+    @property
+    def is_integer(self) -> bool:
+        return self.dtype in _INT_DTYPES
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction from the compiled module.
+
+    ``shapes`` are the RESULT shapes (per-device, post-partitioning) —
+    the payload this device sends/receives. ``replica_groups`` is the
+    decoded device grouping (None when the instruction prints none, or
+    prints a form this parser does not decode).
+    """
+    kind: str
+    shapes: tuple[Shape, ...]
+    replica_groups: tuple[tuple[int, ...], ...] | None
+    line: str
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.shapes)
+
+
+def _parse_shapes(text: str) -> tuple[Shape, ...]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        out.append(Shape(dtype, tuple(int(d) for d in dims.split(",") if d)))
+    return tuple(out)
+
+
+def _parse_replica_groups(line: str
+                          ) -> tuple[tuple[int, ...], ...] | None:
+    m = _GROUPS_LITERAL_RE.search(line)
+    if m:
+        inner = m.group(1) or ""
+        groups = re.findall(r"\{([\d, ]*)\}", inner)
+        return tuple(tuple(int(x) for x in g.replace(" ", "").split(",")
+                           if x) for g in groups)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(d) for d in m.group("dims").split(",")]
+        src = [int(d) for d in m.group("src").split(",")]
+        n = 1
+        for d in src:
+            n *= d
+        ids = list(range(n))
+        if m.group("perm"):
+            # iota laid out over the src dims, transposed, then reshaped
+            perm = [int(p) for p in m.group("perm").split(",")]
+            strides = [1] * len(src)
+            for i in range(len(src) - 2, -1, -1):
+                strides[i] = strides[i + 1] * src[i + 1]
+            t_dims = [src[p] for p in perm]
+            t_strides = [strides[p] for p in perm]
+            ids = []
+            idx = [0] * len(t_dims)
+            for _ in range(n):
+                ids.append(sum(i * s for i, s in zip(idx, t_strides)))
+                for ax in range(len(t_dims) - 1, -1, -1):
+                    idx[ax] += 1
+                    if idx[ax] < t_dims[ax]:
+                        break
+                    idx[ax] = 0
+        group = dims[-1]
+        return tuple(tuple(ids[i:i + group]) for i in range(0, n, group))
+    return None
+
+
+def parse_collective_ops(hlo_text: str) -> list[CollectiveOp]:
+    """Every collective instruction in the module, with shapes + groups."""
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        ops.append(CollectiveOp(
+            kind=m.group("kind"),
+            shapes=_parse_shapes(m.group("result")),
+            replica_groups=_parse_replica_groups(line),
+            line=line.strip()))
+    return ops
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Per collective kind: op count and total RESULT bytes (per device).
+
+    The result shape is the collective's payload on this device: for
+    all-reduce/all-to-all/collective-permute it equals the operand size;
+    for all-gather it is the gathered (received) size; for reduce-scatter
+    the scattered (sent-then-kept) size.
+    """
+    out: dict[str, dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for op in parse_collective_ops(hlo_text):
+        out[op.kind]["count"] += 1
+        out[op.kind]["bytes"] += op.nbytes
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Total collective operand bytes per device (the prompt's definition)."""
+    return int(sum(v["bytes"] for v in parse_collectives(hlo_text).values()))

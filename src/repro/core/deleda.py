@@ -115,7 +115,8 @@ class DeledaConfig:
             raise ValueError(
                 f"vocab_shards={self.vocab_shards} must divide "
                 f"vocab_size={self.lda.vocab_size}")
-        if self.use_pallas:
+        # the deprecation shim itself — the one sanctioned reader
+        if self.use_pallas:   # lint: allow(use-pallas-alias)
             warnings.warn(
                 "DeledaConfig.use_pallas is deprecated; use "
                 "estep_backend='pallas' instead", DeprecationWarning,

@@ -87,15 +87,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         step = steps_mod.build(cfg, shape, mesh, rules=rules,
                                constrain_acts=constrain_acts)
         lowered = step.lower()
-        t_lower = time.time() - t0
+        # lower()/compile() are host-blocking: no device work in flight
+        t_lower = time.time() - t0    # lint: allow(timer-no-barrier)
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.time() - t0 - t_lower   # lint: allow(timer-no-barrier)
 
     mem = _mem_dict(compiled)
     try:
         cost = compiled.cost_analysis() or {}
     except Exception:
         cost = {}
+    if isinstance(cost, (list, tuple)):   # jax<0.6 returns [per-device dict]
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     hlo = compiled.as_text()
@@ -114,8 +117,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         print(f"   memory_analysis: {mem}")
         print(f"   cost_analysis: flops={flops:.3e} "
               f"bytes={bytes_accessed:.3e}")
-        print(f"   collectives: { {k: (int(v['count']), int(v['bytes']))
-                                   for k, v in colls.items()} }")
+        colls_fmt = {k: (int(v["count"]), int(v["bytes"]))
+                     for k, v in colls.items()}
+        print(f"   collectives: {colls_fmt}")
         print(f"   roofline: compute={report.compute_sec:.4f}s "
               f"memory={report.memory_sec:.4f}s "
               f"collective={report.collective_sec:.4f}s "

@@ -60,7 +60,9 @@ def measure(arch: str, out_path: str | None = None) -> dict:
 
         shmap = compat.shard_map(sync, mesh=mesh, in_specs=node,
                                  out_specs=node)
-        compiled = jax.jit(shmap).lower(abs_grads).compile()
+        # one-shot lower per spec: each iteration compiles a DIFFERENT
+        # program for inspection, nothing is re-traced on a hot path
+        compiled = jax.jit(shmap).lower(abs_grads).compile()   # lint: allow(jit-per-call)
         colls = parse_collectives(compiled.as_text())
         hlo_bytes = sum(v["bytes"] for v in colls.values())
         model_bytes = dec.collective_bytes_per_sync(spec, payload,

@@ -44,6 +44,108 @@ from repro.data.lda_synthetic import CorpusSpec, make_corpus
 from repro.launch.mesh import make_host_mesh
 
 
+def build_update_step(lda: LDAConfig, batch_size: int, mesh,
+                      vocab_axis: str | None = None,
+                      estep_backend: str = "dense",
+                      corpus_layout: str = "dense"):
+    """The mesh local-update step as a standalone jitted SPMD program.
+
+    Returns the jitted shard_map over ``update_fn(stats, steps, key,
+    words, mask, alive)`` that :func:`run_mesh_deleda` drives once per
+    gossip round — exported at module level so the invariant auditor
+    (`repro.analysis.trace_audit`) can lower it on its own and assert
+    the collective inventory: NO collectives at all on a 1-D mesh, and
+    on a 2-D node x vocab grid only the vocab-axis psums of the blocked
+    beta assembly (never a node-axis collective, never a doc-shaped
+    operand).
+
+    ``stats`` [n, K, V(/vocab_devices)] sharded over "data" (and
+    ``vocab_axis`` when set); ``words``/``mask`` [n, D, L] node-sharded
+    ("dense" layout) or the `estep.unique_view` (ids, counts) pair
+    ("unique"); ``steps``/``alive`` [n].
+    """
+    rho_fn = make_rho_schedule("power")
+    unique = corpus_layout == "unique"
+    if corpus_layout not in ("dense", "unique"):
+        raise ValueError(f"corpus_layout must be dense|unique, "
+                         f"got {corpus_layout!r}")
+    estep = (estep_mod.get_sparse_estep(estep_backend) if unique
+             else estep_mod.get_estep(estep_backend))
+    node = P("data")
+    stats_spec = P("data", None, vocab_axis) if vocab_axis else node
+
+    def update_fn(stats, steps, key, w, m, al):
+        # stats [n_local, K, V_local]; pure local G-OEM — gossip already
+        # happened via MeshComm outside this jit, and the only collective
+        # here is the O(B*L*K) beta-column psum over the vocab axis of a
+        # 2-D grid. All of the device's nodes run as ONE fused
+        # [n_local*B, L] E-step call; al [n_local] masks down nodes.
+        n_local = stats.shape[0]
+        dev = jax.lax.axis_index("data")
+        key = jax.random.fold_in(key, dev)   # per-device stream (varying
+                                             # over nodes, NOT over vocab
+                                             # shards of the same nodes)
+        ks = jax.vmap(jax.random.split)(jax.random.split(key, n_local))
+        k_sel, k_gibbs = ks[:, 0], ks[:, 1]  # [n_local] each
+
+        def select(k, node_words, node_mask):
+            idx = jax.random.randint(k, (batch_size,), 0,
+                                     node_words.shape[0])
+            return node_words[idx], node_mask[idx]
+
+        bw, bm = jax.vmap(select)(k_sel, w, m)          # [n_local, B, L]
+        maskf = bm.astype(stats.dtype)
+        if vocab_axis:
+            # -- blocked beta assembly across the vocab axis: each shard
+            # contributes (stats[:, w] + tau) for ITS words, one psum of
+            # the [n_local, B, L, K] partials builds the full likelihood
+            # rows — the dense [K, V] topic matrix never exists anywhere
+            v_local = stats.shape[-1]
+            v0 = jax.lax.axis_index(vocab_axis) * v_local
+            denom = jax.lax.psum((stats + lda.tau).sum(-1),
+                                 vocab_axis)            # [n_local, K]
+            lw = bw - v0                                # local word ids
+            in_shard = (lw >= 0) & (lw < v_local)
+            lw = jnp.clip(lw, 0, v_local - 1)
+            cols = jax.vmap(
+                lambda st, ww: jnp.moveaxis(st[:, ww], 0, -1))(stats, lw)
+            part = jnp.where(in_shard[..., None], cols + lda.tau, 0.0)
+            beta_w = jax.lax.psum(part, vocab_axis) / denom[:, None, None]
+            scatter_w, v_scatter = lw, v_local
+            per_pos_mask = in_shard
+        else:
+            beta_w = jax.vmap(
+                lambda st, ww: estep_mod.beta_w_from_stats(
+                    st, ww, lda.tau))(stats, bw)
+            scatter_w, v_scatter = bw, lda.vocab_size
+            per_pos_mask = None
+        if unique:
+            # count-weighted sweeps over the U unique slots; the rows come
+            # back with their token mass folded in, so the shared scatter
+            # below needs no count reweighting (maskf IS the counts here)
+            per_pos = estep_mod.fused_sweeps_sparse(estep, lda, k_gibbs,
+                                                    beta_w, maskf)
+        else:
+            per_pos = estep_mod.fused_sweeps(estep, lda, k_gibbs, beta_w,
+                                             maskf)     # [n_local,B,L,K]
+        if per_pos_mask is not None:
+            # each vocab shard scatters only ITS words' contributions
+            per_pos = jnp.where(per_pos_mask[..., None], per_pos, 0.0)
+        stats_hat = jax.vmap(
+            lambda ww, pp, mm: estep_mod.stats_from_per_pos(
+                ww, pp, v_scatter, mm))(scatter_w, per_pos, maskf)
+        rho = rho_fn(steps + 1).astype(stats.dtype)[:, None, None]
+        new_stats = (1 - rho) * stats + rho * stats_hat
+        return (jnp.where(al[:, None, None], new_stats, stats),
+                jnp.where(al, steps + 1, steps))
+
+    shmap = compat.shard_map(
+        update_fn, mesh=mesh,
+        in_specs=(stats_spec, node, P(), node, node, node),
+        out_specs=(stats_spec, node))
+    return jax.jit(shmap, donate_argnums=(0,))
+
+
 def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     batch_size: int, seed: int = 0, mesh=None,
                     schedule: GossipSchedule | None = None,
@@ -137,18 +239,10 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
     rows = np.arange(n_steps)[:, None]
     pair_up = alive & alive[rows, partners]
     partners = np.where(pair_up, partners, ids)
-    rho_fn = make_rho_schedule("power")
-    unique = corpus_layout == "unique"
-    if corpus_layout not in ("dense", "unique"):
-        raise ValueError(f"corpus_layout must be dense|unique, "
-                         f"got {corpus_layout!r}")
-    if unique:
-        estep = estep_mod.get_sparse_estep(estep_backend)
+    if corpus_layout == "unique":
         # host-side conversion, trimmed to the realized max unique count;
         # from here `words` holds unique ids and `mask` the int32 counts
         words, mask = estep_mod.unique_view(words, mask)
-    else:
-        estep = estep_mod.get_estep(estep_backend)
 
     node = P("data")
     stats_spec = P("data", None, vocab_axis) if vocab_axis else node
@@ -160,76 +254,9 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         jax.random.split(jax.random.key(seed), n))
     stats0 = jax.device_put(stats0, NamedSharding(mesh, stats_spec))
 
-    def update_fn(stats, steps, key, w, m, al):
-        # stats [n_local, K, V_local]; pure local G-OEM — gossip already
-        # happened via MeshComm outside this jit, and the only collective
-        # here is the O(B*L*K) beta-column psum over the vocab axis of a
-        # 2-D grid. All of the device's nodes run as ONE fused
-        # [n_local*B, L] E-step call; al [n_local] masks down nodes.
-        n_local = stats.shape[0]
-        dev = jax.lax.axis_index("data")
-        key = jax.random.fold_in(key, dev)   # per-device stream (varying
-                                             # over nodes, NOT over vocab
-                                             # shards of the same nodes)
-        ks = jax.vmap(jax.random.split)(jax.random.split(key, n_local))
-        k_sel, k_gibbs = ks[:, 0], ks[:, 1]  # [n_local] each
-
-        def select(k, node_words, node_mask):
-            idx = jax.random.randint(k, (batch_size,), 0,
-                                     node_words.shape[0])
-            return node_words[idx], node_mask[idx]
-
-        bw, bm = jax.vmap(select)(k_sel, w, m)          # [n_local, B, L]
-        maskf = bm.astype(stats.dtype)
-        if vocab_axis:
-            # -- blocked beta assembly across the vocab axis: each shard
-            # contributes (stats[:, w] + tau) for ITS words, one psum of
-            # the [n_local, B, L, K] partials builds the full likelihood
-            # rows — the dense [K, V] topic matrix never exists anywhere
-            v_local = stats.shape[-1]
-            v0 = jax.lax.axis_index(vocab_axis) * v_local
-            denom = jax.lax.psum((stats + lda.tau).sum(-1),
-                                 vocab_axis)            # [n_local, K]
-            lw = bw - v0                                # local word ids
-            in_shard = (lw >= 0) & (lw < v_local)
-            lw = jnp.clip(lw, 0, v_local - 1)
-            cols = jax.vmap(
-                lambda st, ww: jnp.moveaxis(st[:, ww], 0, -1))(stats, lw)
-            part = jnp.where(in_shard[..., None], cols + lda.tau, 0.0)
-            beta_w = jax.lax.psum(part, vocab_axis) / denom[:, None, None]
-            scatter_w, v_scatter = lw, v_local
-            per_pos_mask = in_shard
-        else:
-            beta_w = jax.vmap(
-                lambda st, ww: estep_mod.beta_w_from_stats(
-                    st, ww, lda.tau))(stats, bw)
-            scatter_w, v_scatter = bw, lda.vocab_size
-            per_pos_mask = None
-        if unique:
-            # count-weighted sweeps over the U unique slots; the rows come
-            # back with their token mass folded in, so the shared scatter
-            # below needs no count reweighting (maskf IS the counts here)
-            per_pos = estep_mod.fused_sweeps_sparse(estep, lda, k_gibbs,
-                                                    beta_w, maskf)
-        else:
-            per_pos = estep_mod.fused_sweeps(estep, lda, k_gibbs, beta_w,
-                                             maskf)     # [n_local,B,L,K]
-        if per_pos_mask is not None:
-            # each vocab shard scatters only ITS words' contributions
-            per_pos = jnp.where(per_pos_mask[..., None], per_pos, 0.0)
-        stats_hat = jax.vmap(
-            lambda ww, pp, mm: estep_mod.stats_from_per_pos(
-                ww, pp, v_scatter, mm))(scatter_w, per_pos, maskf)
-        rho = rho_fn(steps + 1).astype(stats.dtype)[:, None, None]
-        new_stats = (1 - rho) * stats + rho * stats_hat
-        return (jnp.where(al[:, None, None], new_stats, stats),
-                jnp.where(al, steps + 1, steps))
-
-    shmap = compat.shard_map(
-        update_fn, mesh=mesh,
-        in_specs=(stats_spec, node, P(), node, node, node),
-        out_specs=(stats_spec, node))
-    jitted = jax.jit(shmap, donate_argnums=(0,))
+    jitted = build_update_step(lda, batch_size, mesh, vocab_axis=vocab_axis,
+                               estep_backend=estep_backend,
+                               corpus_layout=corpus_layout)
 
     eval_fn = None
     if eval_every:
@@ -271,6 +298,9 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
             consensus.append(float(gossip.consensus_distance(stats)))
         if eval_fn is not None and (t + 1) % eval_every == 0:
             eval_lp.append(np.asarray(eval_fn(stats[:probe])))
+    # async dispatch: without the barrier the wall clock reads queueing
+    # time for the tail steps, not compute time
+    jax.block_until_ready(stats)
     if eval_fn is not None:
         return stats, consensus, time.time() - t0, np.asarray(eval_lp)
     return stats, consensus, time.time() - t0

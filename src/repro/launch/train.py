@@ -64,6 +64,9 @@ def train_standard(cfg, args, mesh):
                                         "mask": batch.mask})
         losses.append(float(metrics["loss"]))
         if step % args.log_every == 0 or step == args.steps - 1:
+            # async dispatch: drain in-flight steps before reading the
+            # per-step wall clock
+            jax.block_until_ready(state)
             print(f"step {step:4d} loss {losses[-1]:.4f} "
                   f"({(time.time()-t0)/(step+1):.2f}s/step)")
     if args.ckpt:
@@ -148,6 +151,9 @@ def train_decentralized(cfg, args, mesh):
             # consensus diagnostic: max param spread across nodes
             spread = max(float(jnp.abs(x - x.mean(0, keepdims=True)).max())
                          for x in jax.tree.leaves(state.params))
+            # async dispatch: drain in-flight steps before reading the
+            # per-step wall clock
+            jax.block_until_ready(state)
             print(f"step {step:4d} loss {losses[-1]:.4f} "
                   f"param_spread {spread:.2e} "
                   f"({(time.time()-t0)/(step+1):.2f}s/step)")

@@ -5,64 +5,20 @@ roofline's third term comes from scanning the compiled module for
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
 ops and summing their operand sizes (per-device, since compiled HLO shapes
 are already partitioned).
+
+The parser itself now lives in :mod:`repro.analysis.hlo` (it is shared
+with the invariant auditor, which needs per-op shapes and replica
+groups); this module keeps the roofline's historical aggregate API.
 """
 
 from __future__ import annotations
 
-import re
-from collections import defaultdict
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
-
-COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                  "collective-permute")
-
-# Post-optimization HLO prints shapes on the RESULT, operands by name:
-#   %all-reduce.67 = f32[2,64,256]{2,1,0} all-reduce(%bitcast.23), ...
-#   %ar.1 = (f32[8]{0}, f32[4]{0}) all-reduce(%a, %b), ...
-_OP_RE = re.compile(
-    r"=\s*(?P<result>\([^()]*\)|[\w\[\]{},/* ]+?)\s*"
-    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
-    r"collective-permute)(?P<start>-start)?\(")
-
-
-def _shape_bytes(text: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(text):
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
-    """Per collective kind: op count and total RESULT bytes (per device).
-
-    The result shape is the collective's payload on this device: for
-    all-reduce/all-to-all/collective-permute it equals the operand size;
-    for all-gather it is the gathered (received) size; for reduce-scatter
-    the scattered (sent-then-kept) size.
-    """
-    out: dict[str, dict[str, float]] = defaultdict(
-        lambda: {"count": 0, "bytes": 0})
-    for line in hlo_text.splitlines():
-        m = _OP_RE.search(line)
-        if not m:
-            continue
-        kind = m.group("kind")
-        out[kind]["count"] += 1
-        out[kind]["bytes"] += _shape_bytes(m.group("result"))
-    return dict(out)
-
-
-def collective_bytes(hlo_text: str) -> int:
-    """Total collective operand bytes per device (the prompt's definition)."""
-    return int(sum(v["bytes"] for v in parse_collectives(hlo_text).values()))
+from repro.analysis.hlo import (  # noqa: F401  (re-exported API)
+    _DTYPE_BYTES,
+    _OP_RE,
+    _SHAPE_RE,
+    COLLECTIVE_OPS,
+    collective_bytes,
+    parse_collective_ops,
+    parse_collectives,
+)

@@ -1,0 +1,40 @@
+"""Deliberate anti-patterns exercising every repro.analysis.source_lint
+rule. NEVER imported — tests/test_analysis.py lints this file and pins
+the exact findings; the lint CLI excludes ``fixtures`` directories so
+the repo gate stays clean."""
+
+import time
+
+import jax
+import scipy                                     # optional-import
+
+
+def unbarriered_step(fn, x):
+    t0 = time.perf_counter()
+    y = fn(x)
+    return y, time.perf_counter() - t0           # timer-no-barrier
+
+
+def rejit_in_loop(fn, xs):
+    out = []
+    for x in xs:
+        out.append(jax.jit(fn)(x))               # jit-per-call (loop)
+    return out
+
+
+def rejit_in_lambda(fn):
+    return lambda x: jax.jit(fn)(x)              # jit-per-call (lambda)
+
+
+def deprecated_knob(make_config, lda):
+    return make_config(lda=lda, use_pallas=True)  # use-pallas-alias
+
+
+def red_herrings(fn, x):
+    """Clean idioms that must NOT be flagged."""
+    jitted = jax.jit(fn)                  # hoisted jit: fine
+    t0 = time.perf_counter()
+    y = jax.block_until_ready(jitted(x))  # barrier closes the interval
+    dt = time.perf_counter() - t0
+    unused = scipy                        # keep the import referenced
+    return y, dt, unused

@@ -263,16 +263,21 @@ MESH_SCRIPT = textwrap.dedent("""
         err = float(jnp.abs(s_d - s_m).max())
         assert err < 1e-6, (n, err)
 
+    # gossip-is-ppermute-only, via the one shared invariant implementation
+    from repro.analysis import trace_audit as ta
     mesh = comm.MeshComm()
     p = np.array([1, 0, 3, 2, 5, 4, 7, 6], np.int32)
     _, passes = comm._route_matching(p, 8)
     perm, _, _ = passes[0]
-    hlo = mesh._get_pass_fn(perm).lower(
+    compiled = mesh._get_pass_fn(perm).lower(
         jax.ShapeDtypeStruct((8, 4, 64), jnp.float32),
         jax.ShapeDtypeStruct((8,), jnp.int32),
-        jax.ShapeDtypeStruct((8,), bool)).compile().as_text()
-    assert "all-gather" not in hlo, "gossip path must not all-gather"
-    assert "collective-permute" in hlo
+        jax.ShapeDtypeStruct((8,), bool)).compile()
+    report = ta.audit_compiled(compiled, ta.InvariantSpec(
+        "gossip_pass", allowed_collectives=ta.GOSSIP_ALLOWED,
+        max_counts=(("collective-permute", 1),)))
+    assert report.ok, report.summary()
+    assert report.inventory == {"collective-permute": 1}, report.inventory
     print("COMM_MESH_OK")
 """)
 

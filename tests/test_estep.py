@@ -65,9 +65,11 @@ def test_registry_and_validation():
 
 def test_use_pallas_is_deprecated_alias():
     with pytest.warns(DeprecationWarning):
+        # lint: allow(use-pallas-alias) — the deprecation test itself
         cfg = deleda.DeledaConfig(lda=CFG, use_pallas=True)
     assert cfg.estep_backend == "pallas"
     with pytest.warns(DeprecationWarning):
+        # lint: allow(use-pallas-alias)
         cfg = deleda.DeledaConfig(lda=CFG, use_pallas=True,
                                   estep_backend="pallas")
     assert cfg.estep_backend == "pallas"

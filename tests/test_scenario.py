@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.trace_audit import CompileCounter
 from repro.core import comm, deleda
 from repro.core import scenario as scn
 from repro.core.graph import complete_graph, ring_graph, watts_strogatz_graph
@@ -299,14 +300,14 @@ def test_time_varying_schedule_compiles_once(corpus):
         topology=scn.GraphSequence.static(_ws(0), t), name="s")
     rewired = scn.Scenario(topology=_seq(4, 5), drop_prob=0.2,
                            churn=0.2, name="r")
-    before = deleda.run_deleda._cache_size()
-    for i, sc in enumerate((static, rewired)):
-        sched, degs, alive = sc.compile(
-            np.random.default_rng(i)).run_inputs()
-        deleda.run_deleda(cfg, jax.random.key(11), corpus.words,
-                          corpus.mask, sched, degs, t, record_every=10,
-                          alive=alive)
-    assert deleda.run_deleda._cache_size() - before == 1
+    with CompileCounter(deleda.run_deleda) as cc:
+        for i, sc in enumerate((static, rewired)):
+            sched, degs, alive = sc.compile(
+                np.random.default_rng(i)).run_inputs()
+            deleda.run_deleda(cfg, jax.random.key(11), corpus.words,
+                              corpus.mask, sched, degs, t, record_every=10,
+                              alive=alive)
+    assert cc.total == 1, cc.counts
 
 
 def test_paper_scenario_registry():
