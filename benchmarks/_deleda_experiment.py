@@ -224,14 +224,14 @@ def run_scenario_experiment(scale: ExperimentScale,
             np.testing.assert_array_equal(np.asarray(corpus.test_words),
                                           np.asarray(base_corpus.test_words))
         compiled = sc.compile(np.random.default_rng(seed + 17))
-        sched, degs, alive = compiled.run_inputs()
+        sched, degs, alive, member = compiled.run_inputs()
         cfg = deleda.DeledaConfig(lda=scale.lda, mode="async",
                                   batch_size=scale.batch_size)
         t0 = time.time()
         trace = deleda.run_deleda(cfg, jax.random.key(seed + 3),
                                   corpus.words, corpus.mask, sched, degs,
                                   scale.n_steps, scale.record_every,
-                                  alive=alive)
+                                  alive=alive, member=member)
         jax.block_until_ready(trace.stats)
         wall = time.time() - t0
         vals = [eval_beta(trace.stats[i]) for i in range(scale.probe_nodes)]
@@ -245,14 +245,31 @@ def run_scenario_experiment(scale: ExperimentScale,
             "mean_steps_per_node": float(np.asarray(trace.steps).mean()),
             "events": {"drawn": compiled.n_events,
                        "dropped": compiled.n_dropped,
-                       "churned": compiled.n_churned},
+                       "churned": compiled.n_churned,
+                       "excluded": compiled.n_excluded,
+                       "sponsored": compiled.n_sponsored},
             "n_segments": compiled.schedule.n_segments,
         }
+        if member is not None:
+            # the cold-join gate: the member-masked consensus trace must
+            # converge back INTO the eq. (3) envelope after the joiner's
+            # handoff (measured over the tail records, where the joiner
+            # is a member and its statistic has been mixed in)
+            report = deleda.consensus_report(trace, sc.topology.graphs[0],
+                                             cfg, scale.n_steps,
+                                             scale.record_every)
+            tail = max(1, len(report["measured"]) // 4)
+            results["runs"][name]["within_envelope_frac"] = \
+                report["within_envelope_frac"]
+            results["runs"][name]["tail_within_envelope"] = float(
+                (report["measured"][-tail:]
+                 <= report["envelope"][-tail:] + 1e-6).mean())
         if verbose:
             print(f"  {name:>9s}: {wall:6.1f}s  rel={rel:+.4f} "
                   f"D={dist:.4f} events={compiled.n_events} "
                   f"dropped={compiled.n_dropped} "
-                  f"churned={compiled.n_churned}")
+                  f"churned={compiled.n_churned} "
+                  f"sponsored={compiled.n_sponsored}")
 
     if "static" in results["runs"]:
         lp_static = (1.0 + results["runs"]["static"]["rel_perplexity"])

@@ -6,37 +6,15 @@ produced it:
 
     "provenance": {"git_commit": ..., "jax_version": ...,
                    "backend_platform": ...}
+
+The canonical implementation lives in :mod:`repro.provenance` (the
+checkpoint layer stamps its ``meta.json`` sidecars with the same block
+and must not depend on a cwd-relative ``benchmarks`` import); this
+module re-exports it for the bench scripts.
 """
 
 from __future__ import annotations
 
-import os
-import subprocess
+from repro.provenance import provenance, stamp
 
-import jax
-
-
-def provenance() -> dict:
-    try:
-        commit = subprocess.run(
-            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
-            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
-        ).stdout.strip() or "unknown"
-    except Exception:
-        commit = "unknown"
-    return dict(git_commit=commit, jax_version=jax.__version__,
-                backend_platform=jax.default_backend())
-
-
-def stamp(payload):
-    """Return a copy of ``payload`` carrying the provenance block.
-
-    dict payloads gain a "provenance" key; bare row lists are wrapped as
-    {"provenance": ..., "rows": [...]} (nothing consumes the bare-list
-    shape, the wrap keeps every artifact self-describing).
-    """
-    if isinstance(payload, list):
-        return {"provenance": provenance(), "rows": payload}
-    out = dict(payload)
-    out["provenance"] = provenance()
-    return out
+__all__ = ["provenance", "stamp"]

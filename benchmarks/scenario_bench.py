@@ -1,17 +1,26 @@
 """Scenario benchmark: DELEDA convergence + wall-time across network regimes.
 
 Sweeps the named dynamic-network scenarios of `repro.core.scenario`
-({static, rewiring, 10%-drop, 20%-churn, non-IID shards}) at paper scale
-(n=50 Watts-Strogatz, V=100, K=5) and writes BENCH_scenarios.json with
-per-scenario final relative perplexity, beta distance, consensus trace,
-wall seconds and event-masking counts.
+({static, rewiring, 10%-drop, 20%-churn, non-IID shards, cold-join}) at
+paper scale (n=50 Watts-Strogatz, V=100, K=5) and writes
+BENCH_scenarios.json with per-scenario final relative perplexity, beta
+distance, consensus trace, wall seconds and event-masking counts.
 
-The acceptance line this file defends: the rewiring and 10%-drop regimes
+The acceptance lines this file defends: the rewiring and 10%-drop regimes
 land within 10% relative perplexity of the static-graph baseline
-(``lp_ratio_vs_static``), and the whole sweep runs through ONE jitted
-``run_deleda`` trace — time-varying schedules, drop masks and churn masks
-are data, not new programs (`run_deleda._cache_size() == 1`, also asserted
-in tests/test_scenario.py).
+(``lp_ratio_vs_static``); the cold-join regime (a node joins at T/2 via a
+sponsored gossip handoff) converges back INTO the eq. (3) consensus
+envelope (``tail_within_envelope``); and the whole sweep runs through ONE
+jitted ``train_steps`` segment executable per input structure —
+time-varying schedules, drop masks and churn masks are data, not new
+programs (also asserted in tests/test_scenario.py). The membership-masked
+regimes (cold-join) carry one extra traced structure (the ``member_rec``
+input), so the sweep-wide budget is 2 traces, not 1 per scenario.
+
+``--resume-smoke`` additionally runs the lifecycle layer's kill/restore
+drill: train with ``save_every = T/2``, discard everything after the T/2
+checkpoint, resume from disk, and assert the resumed trajectory is
+BITWISE identical to the uninterrupted run (``resume_bitwise``).
 
 Usage: PYTHONPATH=src python -m benchmarks.scenario_bench [--scale smoke]
 """
@@ -20,7 +29,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import shutil
 import sys
+import tempfile
 
 sys.path.insert(0, ".")
 
@@ -32,6 +44,48 @@ from benchmarks._deleda_experiment import (get_scale,  # noqa: E402
 # regimes (drop10, rewiring); churn/noniid are reported, not gated
 ACCEPT_RATIO = 0.10
 GATED = ("rewiring", "drop10")
+# the cold-join gate: fraction of tail records (the post-join regime)
+# whose member-masked consensus sits within the eq. (3) envelope
+COLDJOIN_TAIL_FRAC = 1.0
+
+
+def resume_smoke(scale, seed: int = 0) -> bool:
+    """Kill at T/2, resume from disk, compare bitwise to the full run."""
+    import jax
+    import numpy as np
+
+    from repro.core import deleda
+    from repro.core.scenario import paper_scenario
+    from repro.data.lda_synthetic import make_corpus
+
+    corpus = make_corpus(scale.lda, jax.random.key(seed), scale.corpus)
+    sc = paper_scenario("static", n=scale.corpus.n_nodes,
+                        n_steps=scale.n_steps, seed=seed, ws_k=scale.ws_k)
+    sched, degs, alive, member = sc.compile(
+        np.random.default_rng(seed + 17)).run_inputs()
+    cfg = deleda.DeledaConfig(lda=scale.lda, mode="async",
+                              batch_size=scale.batch_size)
+    key = jax.random.key(seed + 3)
+    half = scale.n_steps // 2
+    with tempfile.TemporaryDirectory() as d:
+        full = deleda.run_deleda(cfg, key, corpus.words, corpus.mask,
+                                 sched, degs, scale.n_steps,
+                                 scale.record_every, alive=alive,
+                                 save_every=half, checkpoint_dir=d)
+        # the kill: drop everything after the T/2 checkpoint
+        final = os.path.join(d, f"step_{scale.n_steps:08d}")
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        resumed = deleda.run_deleda(cfg, key, corpus.words, corpus.mask,
+                                    sched, degs, scale.n_steps,
+                                    scale.record_every, alive=alive,
+                                    restore_from=d)
+    return bool(
+        np.array_equal(np.asarray(full.stats), np.asarray(resumed.stats))
+        and np.array_equal(np.asarray(full.history[-1]),
+                           np.asarray(resumed.history[-1]))
+        and np.array_equal(np.asarray(full.consensus[-1]),
+                           np.asarray(resumed.consensus[-1])))
 
 
 def main(argv=None):
@@ -39,22 +93,26 @@ def main(argv=None):
     ap.add_argument("--scale", default="paper", choices=["paper", "smoke"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("-o", "--out", default="BENCH_scenarios.json")
+    ap.add_argument("--resume-smoke", action="store_true",
+                    help="also run the kill-at-T/2-then-resume drill and "
+                         "gate on the bitwise golden")
     args = ap.parse_args(argv)
 
     from repro.analysis.trace_audit import CompileCounter
     from repro.core import deleda
     scale = get_scale(f"scenario_{args.scale}")
     # delta, not absolute: other benchmark sections (benchmarks/run.py)
-    # may already have compiled run_deleda with different shapes/configs
-    with CompileCounter(deleda.run_deleda) as cc:
+    # may already have compiled the segment fn with different shapes
+    with CompileCounter(deleda.train_steps) as cc:
         res = run_scenario_experiment(scale, seed=args.seed)
     res["scale"] = args.scale
 
-    # the whole sweep must have hit ONE compiled trace: same shapes, same
-    # static config -> schedules/alive masks are data, not new programs
+    # the whole sweep must ride ONE compiled segment trace per input
+    # structure: memberless regimes share one, the membership-masked
+    # cold-join adds the member_rec input -> at most 2
     n_traces = cc.total
     res["run_deleda_compilations"] = n_traces
-    print(f"\nrun_deleda compilations for the whole sweep: {n_traces}")
+    print(f"\ntrain_steps compilations for the whole sweep: {n_traces}")
 
     ok = True
     if args.scale == "paper":
@@ -64,7 +122,21 @@ def main(argv=None):
             ok &= passed
             print(f"  {name:>9s}: LP ratio vs static {ratio:+.4f} "
                   f"({'OK' if passed else 'FAIL'} @ {ACCEPT_RATIO:.0%})")
-        ok &= n_traces <= 1          # 0 = full cache hit from a prior run
+        if "coldjoin" in res["runs"]:
+            tail = res["runs"]["coldjoin"]["tail_within_envelope"]
+            passed = tail >= COLDJOIN_TAIL_FRAC
+            ok &= passed
+            print(f"   coldjoin: tail within eq.(3) envelope {tail:.0%} "
+                  f"({'OK' if passed else 'FAIL'} @ "
+                  f"{COLDJOIN_TAIL_FRAC:.0%})")
+        ok &= n_traces <= 2          # 0 = full cache hit from a prior run
+
+    if args.resume_smoke:
+        bit = resume_smoke(scale, seed=args.seed)
+        res["resume_bitwise"] = bit
+        ok &= bit
+        print(f"  resume smoke: bitwise "
+              f"{'IDENTICAL (OK)' if bit else 'MISMATCH (FAIL)'}")
     res["accept"] = bool(ok)
 
     with open(args.out, "w") as f:

@@ -174,10 +174,10 @@ def audit_compiled(compiled, spec: InvariantSpec) -> AuditReport:
 class CompileCounter:
     """Counts new traces of jitted callables across a ``with`` block.
 
-    Generalizes the scattered ``run_deleda._cache_size()`` delta asserts:
+    Generalizes the scattered ``train_steps._cache_size()`` delta asserts:
 
-        with CompileCounter(deleda.run_deleda) as cc:
-            ... drive N steps ...
+        with CompileCounter(deleda.train_steps) as cc:
+            ... drive N segments ...
         assert cc.total == 1, cc.counts
 
     Any jitted function (``jax.jit`` output or a jitted method cached on
@@ -243,15 +243,21 @@ def _build_deleda(vocab_shards: int = 1):
     from repro.core.graph import complete_graph
 
     def build():
-        n, d = 4, 6
+        n, d, t = 4, 6, 4
         cfg = deleda.DeledaConfig(lda=_tiny_lda(), mode="async",
                                   batch_size=3, vocab_shards=vocab_shards)
-        edges, degs = deleda.make_run_inputs(complete_graph(n), 4, seed=0)
+        edges, degs = deleda.make_run_inputs(complete_graph(n), t, seed=0)
         words = jnp.zeros((n, d, _L), jnp.int32)
         mask = jnp.ones((n, d, _L), bool)
-        return deleda.run_deleda.lower(
-            cfg, jax.random.key(0), words, mask, edges, degs, 4,
-            record_every=2).compile()
+        # the lifecycle layer's compiled unit: run_deleda is now a host
+        # driver looping THIS jitted segment fn, so the scan invariants
+        # are audited where the executable actually lives
+        state = deleda.init_state(cfg, jax.random.key(0), n)
+        corr = jnp.ones((t, n), jnp.float32)
+        live = jnp.ones((t, n), bool)
+        return deleda.train_steps.lower(
+            cfg, state, words, mask, edges, corr, live,
+            record_every=2, kind="edge").compile()
     return build
 
 

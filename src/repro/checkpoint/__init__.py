@@ -1,6 +1,7 @@
 """Pytree checkpointing (npz-based, dependency-free)."""
 
 from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
-                                         latest_step)
+                                         latest_step, load_meta)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "load_meta"]

@@ -4,17 +4,27 @@ Keys are key-path strings ("params/layers/attn/wq"); restore rebuilds into
 a caller-provided structure (`like=`), so namedtuples/dataclasses round-trip
 without pickling. Atomic write (tmp + rename); `step` directories allow
 keeping history: <dir>/step_000123/state.npz.
+
+Commit protocol: a step directory is *committed* iff its ``state.npz``
+exists. ``meta.json`` (provenance + caller metadata, written first) and any
+leftover ``*.npz.tmp`` from a crashed save never make a directory eligible
+— ``latest_step`` skips uncommitted dirs, so a kill mid-save falls back to
+the previous good checkpoint instead of dying in ``restore_checkpoint``.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import re
 import tempfile
+import warnings
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.provenance import provenance
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -41,17 +51,13 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, tree, step: int) -> str:
-    """Write <directory>/step_<step>/state.npz atomically. Returns path."""
-    step_dir = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(step_dir, exist_ok=True)
-    flat = _flatten(jax.device_get(tree))
-    fd, tmp = tempfile.mkstemp(dir=step_dir, suffix=".npz.tmp")
+def _write_atomic(step_dir: str, name: str, write_fn) -> str:
+    fd, tmp = tempfile.mkstemp(dir=step_dir, suffix=f".{name}.tmp")
     os.close(fd)
     try:
         with open(tmp, "wb") as f:
-            np.savez(f, **flat)
-        final = os.path.join(step_dir, "state.npz")
+            write_fn(f)
+        final = os.path.join(step_dir, name)
         os.replace(tmp, final)
     finally:
         if os.path.exists(tmp):
@@ -59,21 +65,81 @@ def save_checkpoint(directory: str, tree, step: int) -> str:
     return final
 
 
+def save_checkpoint(directory: str, tree, step: int,
+                    meta: Optional[dict] = None) -> str:
+    """Write <directory>/step_<step>/state.npz atomically. Returns path.
+
+    A ``meta.json`` sidecar ({git_commit, jax_version, backend_platform}
+    + the caller's ``meta`` entries, e.g. a config digest) is written
+    *before* the npz commit: a crash between the two leaves an
+    uncommitted dir (sidecar but no state.npz) that ``latest_step``
+    ignores, so every *visible* checkpoint carries its provenance.
+    """
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    sidecar = dict(provenance(), **(meta or {}))
+    blob = json.dumps(sidecar, indent=2, sort_keys=True).encode()
+    _write_atomic(step_dir, "meta.json", lambda f: f.write(blob))
+    flat = _flatten(jax.device_get(tree))
+    return _write_atomic(step_dir, "state.npz",
+                         lambda f: np.savez(f, **flat))
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Largest *committed* step (a dir counts only once state.npz landed).
+
+    A crashed save leaves ``step_NNNN/`` holding at most a tmp file and
+    the meta sidecar; counting it would send ``restore_checkpoint`` into
+    a FileNotFoundError instead of the previous good checkpoint.
+    """
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
+             if (m := re.fullmatch(r"step_(\d+)", d))
+             and os.path.exists(os.path.join(directory, d, "state.npz"))]
     return max(steps) if steps else None
 
 
-def restore_checkpoint(directory: str, like, step: Optional[int] = None):
-    """Restore into the structure of `like` (arrays or ShapeDtypeStructs)."""
+def load_meta(directory: str, step: Optional[int] = None) -> Optional[dict]:
+    """The meta.json sidecar of a checkpoint, or None if absent."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    path = os.path.join(directory, f"step_{step:08d}", "meta.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def restore_checkpoint(directory: str, like, step: Optional[int] = None,
+                       expect_config_digest: Optional[str] = None):
+    """Restore into the structure of `like` (arrays or ShapeDtypeStructs).
+
+    Every stored array's shape is checked against its `like` leaf — a
+    checkpoint written under a different layout (e.g. another
+    ``vocab_shards``) fails loudly with the offending key and both
+    shapes instead of silently unflattening garbage. When
+    ``expect_config_digest`` is given and the sidecar recorded a
+    different ``config_digest``, a UserWarning is issued (the restore
+    still proceeds: digests also differ for harmless knob changes like
+    eval cadence).
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:08d}", "state.npz")
+    if expect_config_digest is not None:
+        meta = load_meta(directory, step)
+        stored_digest = (meta or {}).get("config_digest")
+        if stored_digest is not None and stored_digest != expect_config_digest:
+            warnings.warn(
+                f"checkpoint {path} was written under config digest "
+                f"{stored_digest} but is being restored under "
+                f"{expect_config_digest}; the run configurations differ",
+                UserWarning, stacklevel=2)
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     keys = ["/".join(_path_str(p) for p in path_elems)
@@ -97,6 +163,13 @@ def restore_checkpoint(directory: str, like, step: Optional[int] = None):
             arr = data[key + ".__bf16__"].view(ml_dtypes.bfloat16)
         else:
             arr = data[key]
+        expected = getattr(leaf, "shape", None)
+        if expected is not None and tuple(arr.shape) != tuple(expected):
+            raise ValueError(
+                f"checkpoint {path}: stored array {key!r} has shape "
+                f"{tuple(arr.shape)} but the restore structure expects "
+                f"{tuple(expected)} — was this checkpoint written under "
+                f"a different config (e.g. vocab_shards)?")
         if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
             arr = arr.astype(leaf.dtype)
         leaves.append(arr)

@@ -149,10 +149,24 @@ def mixing_matrix_matching(partners: np.ndarray) -> np.ndarray:
     return w
 
 
-def consensus_distance(stats: jax.Array) -> jax.Array:
-    """||S - mean(S) 1^T||_F — the left side of paper eq. (3)."""
-    mean = stats.mean(axis=0, keepdims=True)
-    return jnp.linalg.norm((stats - mean).reshape(stats.shape[0], -1))
+def consensus_distance(stats: jax.Array,
+                       member: jax.Array | None = None) -> jax.Array:
+    """||S - mean(S) 1^T||_F — the left side of paper eq. (3).
+
+    ``member`` ([n] bool, lifecycle layer) restricts both the mean and
+    the norm to the member nodes: a node that has not yet cold-joined
+    (or has permanently left) carries init-only statistics that say
+    nothing about the live network's agreement. ``member=None`` is the
+    original unmasked computation, bit-for-bit.
+    """
+    if member is None:
+        mean = stats.mean(axis=0, keepdims=True)
+        return jnp.linalg.norm((stats - mean).reshape(stats.shape[0], -1))
+    w = member.astype(stats.dtype).reshape(
+        (-1,) + (1,) * (stats.ndim - 1))                     # [n, 1, ...]
+    count = jnp.maximum(jnp.sum(member), 1).astype(stats.dtype)
+    mean = (stats * w).sum(axis=0, keepdims=True) / count
+    return jnp.linalg.norm(((stats - mean) * w).reshape(stats.shape[0], -1))
 
 
 def consensus_envelope(lambda2: float, rhos: np.ndarray,

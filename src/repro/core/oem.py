@@ -42,21 +42,58 @@ def make_rho_schedule(kind: str = "power", *, kappa: float = 0.6,
     return rho
 
 
+def make_decay_schedule(tau0: float, kappa: float
+                        ) -> Callable[[jax.Array], jax.Array]:
+    """Robbins–Monro forgetting rate d_t = (tau0 + t)^-kappa.
+
+    The Hoffman et al. online-VB idiom: the SAME power-law family as the
+    learning-rate schedule, but consumed as an *extra* discount on the
+    carried sufficient statistic (see :func:`forgetting_rho`), so
+    documents streamed in long ago lose weight and a mid-run corpus swap
+    (``CorpusSpec.refresh_every``) is actually forgotten rather than
+    averaged against forever. kappa in (0, 1]: too-fast decay (kappa > 1)
+    would sum finitely and freeze the statistic's effective window.
+    """
+    if not 0.0 < kappa <= 1.0:
+        raise ValueError(f"decay kappa must be in (0, 1], got {kappa}")
+    if tau0 < 0.0:
+        raise ValueError(f"decay tau0 must be >= 0, got {tau0}")
+    return make_rho_schedule("power", kappa=kappa, t0=tau0)
+
+
+def forgetting_rho(rho: jax.Array, decay: jax.Array) -> jax.Array:
+    """Fold a forgetting rate into the blend weight: 1 - (1-rho)(1-d).
+
+    The eq. (2) update keeps (1 - rho) of the old statistic; with
+    forgetting it keeps (1 - rho)(1 - d_t) — the old mass is discounted
+    by d_t *before* the fresh minibatch statistic is blended in, and the
+    combined weight stays a convex coefficient in [0, 1] (so the update
+    remains a mass-preserving blend, never an extrapolation).
+    """
+    return 1.0 - (1.0 - rho) * (1.0 - decay)
+
+
 def oem_update(config: LDAConfig, state: LDAState, key: jax.Array,
                words: jax.Array, mask: jax.Array,
                rho_fn: Callable[[jax.Array], jax.Array],
-               estep=None) -> LDAState:
+               estep=None, decay_fn=None) -> LDAState:
     """One G-OEM step on a minibatch of documents (eq. 2).
 
     `estep` is any callable with the E-step signature — an
     `repro.core.estep` backend (`get_estep("dense"|"pallas")`) or a
-    compatible function; defaults to the dense backend.
+    compatible function; defaults to the dense backend. `decay_fn`
+    (e.g. :func:`make_decay_schedule`) adds Robbins–Monro forgetting:
+    the carried statistic is discounted by d_t each update so streamed
+    documents supersede stale ones; None is the paper's plain eq. (2).
     """
     estep = estep or estep_mod.get_estep("dense")
     t = state.step + 1
     beta = eta_star(state.stats, config.tau)
     result = estep(config, key, words, mask, beta)
     rho = rho_fn(t).astype(state.stats.dtype)
+    if decay_fn is not None:
+        decay = jnp.clip(decay_fn(t), 0.0, 1.0).astype(state.stats.dtype)
+        rho = forgetting_rho(rho, decay)
     new_stats = (1.0 - rho) * state.stats + rho * result.stats
     return LDAState(stats=new_stats, step=t,
                     stats_version=state.stats_version + 1)
@@ -69,22 +106,27 @@ class OEMTrace(NamedTuple):
 
 @partial(jax.jit, static_argnames=("config", "n_steps", "batch_size",
                                    "record_every", "rho_kind",
-                                   "estep_backend"))
+                                   "estep_backend", "decay"))
 def run_oem(config: LDAConfig, key: jax.Array, words: jax.Array,
             mask: jax.Array, n_steps: int, batch_size: int,
             record_every: int = 10, rho_kind: str = "power",
             rho_kappa: float = 0.6, rho_t0: float = 10.0,
-            estep_backend: str = "dense") -> OEMTrace:
+            estep_backend: str = "dense",
+            decay: tuple[float, float] | None = None) -> OEMTrace:
     """Run centralized G-OEM for `n_steps`, sampling `batch_size` docs
     uniformly at random per step from the corpus (paper S4 baseline).
 
     words: [D, L] int32, mask: [D, L] bool. Records stats snapshots every
     `record_every` steps (n_steps must be divisible by record_every).
     `estep_backend` selects the E-step substrate ("dense" | "pallas").
+    `decay=(tau0, kappa)` turns on Robbins–Monro forgetting
+    (:func:`make_decay_schedule`); None keeps the paper's plain eq. (2).
     """
     if n_steps % record_every != 0:
         raise ValueError("n_steps must be divisible by record_every")
     rho_fn = make_rho_schedule(rho_kind, kappa=rho_kappa, t0=rho_t0)
+    decay_fn = (make_decay_schedule(*decay) if decay is not None
+                else None)
     estep = estep_mod.get_estep(estep_backend)
     d = words.shape[0]
     k_init, k_run = jax.random.split(key)
@@ -94,7 +136,7 @@ def run_oem(config: LDAConfig, key: jax.Array, words: jax.Array,
         k_sel, k_gibbs = jax.random.split(k)
         idx = jax.random.randint(k_sel, (batch_size,), 0, d)
         state = oem_update(config, state, k_gibbs, words[idx], mask[idx],
-                           rho_fn, estep=estep)
+                           rho_fn, estep=estep, decay_fn=decay_fn)
         return state, None
 
     def record_block(state, k):

@@ -37,16 +37,31 @@ Three composable ingredients:
   draws Dirichlet(topic_skew)-skewed topic weights, so its corpus is
   topically biased — the regime where gossip actually matters.
 
+* **Permanent membership** (lifecycle layer) — ``joins``/``leaves`` are
+  (node, step) events ON TOP of Markov churn: a joining node is not a
+  member before its join step (frozen at its init statistics, excluded
+  from mixing and from the consensus trace) and a leaving node never
+  comes back. The cold-join handoff rides the EXISTING gossip round: at
+  the join step the compiler re-pairs the joiner with a live member
+  neighbor (its *sponsor*), so its first mix inherits the network's
+  blended statistic through the ordinary comm path — no new collective
+  kinds, every backend (dense / pallas / mesh ppermute) unchanged, and
+  the analysis layer's privacy/collective audits hold as-is. The planted
+  handoff pair is exempt from Bernoulli drops (the join is deliberate);
+  everything else cancels exactly like churn. Membership is emitted as
+  the ``member [T, n]`` mask consumed by ``run_deleda``.
+
 Typical use::
 
     seq = GraphSequence.rewiring(lambda s: watts_strogatz_graph(50, 4, 0.3,
                                                                 seed=s),
                                  n_segments=5, steps_per_segment=60)
-    sc = Scenario(topology=seq, drop_prob=0.1, churn=0.2)
+    sc = Scenario(topology=seq, drop_prob=0.1, churn=0.2,
+                  joins=((49, 150),))
     compiled = sc.compile(np.random.default_rng(0))
-    sched, degs, alive = compiled.run_inputs()
+    sched, degs, alive, member = compiled.run_inputs()
     trace = run_deleda(cfg, key, words, mask, sched, degs, seq.n_steps,
-                       alive=alive)
+                       alive=alive, member=member)
 """
 
 from __future__ import annotations
@@ -172,12 +187,22 @@ class CompiledScenario(NamedTuple):
     n_events: int              # gossip events drawn before masking
     n_dropped: int             # events removed by Bernoulli message drops
     n_churned: int             # events removed because an endpoint was down
+    member: np.ndarray | None = None   # [T, n] bool permanent membership
+                                       # (None = no join/leave events —
+                                       # run_deleda's original path)
+    n_excluded: int = 0        # events removed because an endpoint was
+                               # not (yet / anymore) a member
+    n_sponsored: int = 0       # cold joins that got a planted handoff pair
 
     def run_inputs(self):
-        """(schedule, degrees, alive) device arrays for ``run_deleda``."""
+        """(schedule, degrees, alive, member) device arrays for
+        ``run_deleda`` (member is None when the scenario has no
+        join/leave events)."""
+        member = None if self.member is None else jnp.asarray(self.member)
         return (jnp.asarray(self.schedule.data),
                 jnp.asarray(self.degrees),
-                jnp.asarray(self.alive))
+                jnp.asarray(self.alive),
+                member)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,6 +217,14 @@ class Scenario:
     topic_skew:       Dirichlet concentration of the per-node topic-weight
                       draw in data/lda_synthetic (None = IID shards);
                       carried here so one object describes the whole regime.
+    joins:            ((node, step), ...) PERMANENT cold joins: the node is
+                      not a member before ``step`` (frozen, excluded from
+                      consensus); at ``step`` the compiler plants a
+                      sponsor pairing so its first gossip round is the
+                      state handoff.
+    leaves:           ((node, step), ...) permanent departures: the node's
+                      last member round is ``step - 1`` and it never
+                      returns.
     """
 
     topology: GraphSequence
@@ -200,6 +233,8 @@ class Scenario:
     churn: float = 0.0
     churn_mean_down: float = 10.0
     topic_skew: float | None = None
+    joins: tuple = ()
+    leaves: tuple = ()
     name: str = "scenario"
 
     def __post_init__(self):
@@ -218,10 +253,49 @@ class Scenario:
                     f"churn={self.churn} with mean down spell "
                     f"{self.churn_mean_down} needs P(up->down)={q:.2f} > 1; "
                     f"lower churn or raise churn_mean_down")
+        n, t = self.topology.n_nodes, self.topology.n_steps
+        joins = tuple((int(i), int(s)) for i, s in self.joins)
+        leaves = tuple((int(i), int(s)) for i, s in self.leaves)
+        object.__setattr__(self, "joins", joins)
+        object.__setattr__(self, "leaves", leaves)
+        for label, events, lo, hi in (("join", joins, 0, t - 1),
+                                      ("leave", leaves, 1, t)):
+            nodes = [i for i, _ in events]
+            if len(nodes) != len(set(nodes)):
+                raise ValueError(f"at most one {label} event per node, "
+                                 f"got {events}")
+            for i, s in events:
+                if not 0 <= i < n:
+                    raise ValueError(f"{label} node {i} outside [0, {n})")
+                if not lo <= s <= hi:
+                    raise ValueError(f"{label} step {s} outside "
+                                     f"[{lo}, {hi}] for horizon {t}")
+        join_at = dict(joins)
+        for i, s in leaves:
+            if i in join_at and join_at[i] >= s:
+                raise ValueError(f"node {i} joins at {join_at[i]} but "
+                                 f"leaves at {s}; join must come first")
 
     @property
     def n_steps(self) -> int:
         return self.topology.n_steps
+
+    # -- permanent membership ------------------------------------------------
+
+    def member_mask(self) -> np.ndarray:
+        """[T, n] bool: membership per round (monotone per node).
+
+        A joiner at (i, s) is a member FROM round s inclusive — its join
+        round is its handoff mix; a leaver at (i, s) is a member UP TO
+        round s - 1.
+        """
+        t, n = self.n_steps, self.topology.n_nodes
+        member = np.ones((t, n), bool)
+        for i, s in self.joins:
+            member[:s, i] = False
+        for i, s in self.leaves:
+            member[s:, i] = False
+        return member
 
     # -- churn process -------------------------------------------------------
 
@@ -247,12 +321,61 @@ class Scenario:
 
     # -- compilation ---------------------------------------------------------
 
+    def _plant_sponsors(self, data: np.ndarray, alive: np.ndarray,
+                        member: np.ndarray, rng: np.random.Generator
+                        ) -> tuple[np.ndarray, int]:
+        """Re-pair each joiner with a live member neighbor at its join round.
+
+        The handoff is an ORDINARY gossip event — the joiner's first mix
+        averages its init statistics with the sponsor's blended ones, so
+        it inherits the network's state through the existing comm path.
+        Returns (protected mask, n_sponsored); protected events are exempt
+        from Bernoulli drops (the join is deliberate, not best-effort).
+        No sponsor is planted when the joiner is down or has no eligible
+        neighbor that round — the node still joins, just colder.
+        """
+        n = self.topology.n_nodes
+        same_step_joiners = {}
+        for i, s in self.joins:
+            same_step_joiners.setdefault(s, set()).add(i)
+        if self.kind == MATCHING:
+            protected = np.zeros(data.shape, bool)
+        else:
+            protected = np.zeros(len(data), bool)
+        n_sponsored = 0
+        for i, s in self.joins:
+            if not alive[s, i]:
+                continue
+            adj = self.topology.graph_at(s).adjacency()
+            eligible = (adj[i].astype(bool) & alive[s] & member[s])
+            for other in same_step_joiners[s]:
+                eligible[other] = False        # a fellow cold node has
+            eligible[i] = False                # nothing to hand off
+            cand = np.nonzero(eligible)[0]
+            if cand.size == 0:
+                continue
+            j = int(rng.choice(cand))
+            if self.kind == MATCHING:
+                # splice (i, j) into the round's involution: detach both
+                # nodes' existing partners, then pair them
+                pi, pj = data[s, i], data[s, j]
+                data[s, pi], data[s, pj] = pi, pj
+                data[s, i], data[s, j] = j, i
+                protected[s, i] = protected[s, j] = True
+            else:
+                data[s] = (i, j)
+                protected[s] = True
+            n_sponsored += 1
+        return protected, n_sponsored
+
     def compile(self, rng: np.random.Generator | int = 0) -> CompiledScenario:
         """Pre-draw + mask the whole trajectory into plain schedule data.
 
         Order of operations per round: (1) draw the gossip event(s) from the
-        segment's graph, (2) cancel events touching a down endpoint (churn),
-        (3) drop each surviving event with probability ``drop_prob``.
+        segment's graph, (2) plant the cold-join sponsor pairings, (3)
+        cancel events touching a down endpoint (churn), (4) cancel events
+        touching a non-member endpoint (permanent join/leave), (5) drop
+        each surviving unprotected event with probability ``drop_prob``.
         Cancelled events become the Communicator layer's existing no-op
         encoding (self-partner / ``(i, i)`` edge sentinel), so every comm
         backend applies them unchanged.
@@ -263,6 +386,19 @@ class Scenario:
         alive = self.draw_alive(rng)
         data = sched.data.copy()
         t = len(data)
+        has_membership = bool(self.joins or self.leaves)
+        member = self.member_mask() if has_membership else None
+        if has_membership:
+            protected, n_sponsored = self._plant_sponsors(
+                data, alive, member, rng)
+        else:
+            # a real ndarray, not Python False: `~False` is the int -1,
+            # which would silently promote the drop masks to int 0/1
+            # arrays and turn the boolean row indexing below into fancy
+            # indexing of rows 0/1
+            protected = np.zeros(
+                data.shape if self.kind == MATCHING else t, bool)
+            n_sponsored = 0
 
         if self.kind == MATCHING:
             ids = np.arange(self.topology.n_nodes, dtype=np.int32)
@@ -274,24 +410,45 @@ class Scenario:
             churned = matched & pair_down
             data = np.where(churned, ids, data)
             n_churned = int(churned.sum()) // 2
+            # membership: a pair with a non-member endpoint cancels the
+            # same way (the planted handoff pairs survive by construction:
+            # the joiner IS a member from its join round, the sponsor was
+            # chosen live-and-member)
+            if has_membership:
+                still = data != ids
+                pair_out = ~member | ~member[rows, data]
+                excluded = still & pair_out
+                data = np.where(excluded, ids, data)
+                n_excluded = int(excluded.sum()) // 2
+            else:
+                n_excluded = 0
             # drops: one coin per PAIR — draw on the (i < p[i]) side and
-            # mirror, so both endpoints see the same coin
+            # mirror, so both endpoints see the same coin; planted
+            # handoff pairs are exempt
             still = data != ids
             coin = rng.random(data.shape) < self.drop_prob
             low = still & (ids < data)                          # pair owners
-            drop_low = low & coin
+            drop_low = low & coin & ~protected
             dropped = drop_low | drop_low[rows, data]
             data = np.where(dropped, ids, data)
             n_dropped = int(dropped.sum()) // 2
         else:
             i, j = data[:, 0], data[:, 1]
             n_events = t
-            churned = ~alive[np.arange(t), i] | ~alive[np.arange(t), j]
+            steps_idx = np.arange(t)
+            churned = ~alive[steps_idx, i] | ~alive[steps_idx, j]
             n_churned = int(churned.sum())
-            coin = rng.random(t) < self.drop_prob
-            dropped = ~churned & coin
+            if has_membership:
+                out = ~member[steps_idx, i] | ~member[steps_idx, j]
+                excluded = ~churned & out
+                n_excluded = int(excluded.sum())
+            else:
+                excluded = np.zeros(t, bool)
+                n_excluded = 0
+            coin = (rng.random(t) < self.drop_prob) & ~protected
+            dropped = ~churned & ~excluded & coin
             n_dropped = int(dropped.sum())
-            dead = churned | dropped
+            dead = churned | excluded | dropped
             # the (i, i) sentinel: mix is identity, run_deleda wakes no one
             data[dead, 1] = data[dead, 0]
 
@@ -300,14 +457,17 @@ class Scenario:
         return CompiledScenario(schedule=sched, alive=alive,
                                 degrees=self.topology.degrees(),
                                 n_events=n_events, n_dropped=n_dropped,
-                                n_churned=n_churned)
+                                n_churned=n_churned, member=member,
+                                n_excluded=n_excluded,
+                                n_sponsored=n_sponsored)
 
 
 # ----------------------------------------------------------------------------
 # The named regimes of benchmarks/scenario_bench.py
 # ----------------------------------------------------------------------------
 
-SCENARIO_NAMES = ("static", "rewiring", "drop10", "churn20", "noniid")
+SCENARIO_NAMES = ("static", "rewiring", "drop10", "churn20", "noniid",
+                  "coldjoin")
 
 
 def paper_scenario(name: str, n: int = 50, n_steps: int = 300,
@@ -319,7 +479,10 @@ def paper_scenario(name: str, n: int = 50, n_steps: int = 300,
     rewiring — the WS graph re-drawn every n_steps/n_segments rounds;
     drop10   — static topology, 10% of gossip exchanges lost;
     churn20  — static topology, 20% of nodes down at any time;
-    noniid   — static topology, Dirichlet(0.5)-skewed topic shards.
+    noniid   — static topology, Dirichlet(0.5)-skewed topic shards;
+    coldjoin — static topology, the last node cold-joins at T/2 (its
+               sponsor handoff rides that round's gossip; gate: the
+               member-masked consensus re-enters the eq. (3) envelope).
     """
     if name not in SCENARIO_NAMES:
         raise ValueError(f"unknown scenario {name!r}; want one of "
@@ -340,5 +503,6 @@ def paper_scenario(name: str, n: int = 50, n_steps: int = 300,
         "drop10": {"drop_prob": 0.1},
         "churn20": {"churn": 0.2},
         "noniid": {"topic_skew": 0.5},
+        "coldjoin": {"joins": ((n - 1, n_steps // 2),)},
     }[name]
     return Scenario(topology=seq, name=name, **knobs)

@@ -35,6 +35,7 @@ from repro.configs.lda_paper import CONFIG as PAPER
 from repro.core import comm as comm_mod
 from repro.core import evaluation
 from repro.core import gossip
+from repro.core import deleda as deleda_mod
 from repro.core.comm import GossipSchedule, MeshComm
 from repro.core.graph import complete_graph, watts_strogatz_graph
 from repro.core.lda import LDAConfig, beta_distance, eta_star, init_stats
@@ -155,7 +156,11 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                     eval_every: int = 0,
                     eval_spec: evaluation.EvalSpec | None = None,
                     corpus_layout: str = "dense",
-                    eval_backend: str = "fused"):
+                    eval_backend: str = "fused",
+                    member: np.ndarray | None = None,
+                    save_every: int = 0,
+                    checkpoint_dir: str | None = None,
+                    restore_from: str | None = None):
     """words/mask [n, D, L] node-sharded over the mesh "data" axis.
 
     Returns (stats [n, K, V], consensus trace, wall seconds) — plus, when
@@ -216,6 +221,8 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                 f"but the corpus shards {n}")
         compiled = scenario.compile(np.random.default_rng(seed))
         schedule, alive = compiled.schedule, compiled.alive
+        if member is None:
+            member = compiled.member
         if n_steps > schedule.n_rounds:
             raise ValueError(f"scenario horizon {schedule.n_rounds} < "
                              f"n_steps {n_steps}")
@@ -233,11 +240,25 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
         if alive.shape != (n_steps, n):
             raise ValueError(f"alive must cover [{n_steps}, {n}], "
                              f"got shape {alive.shape}")
+    # permanent membership (lifecycle layer): a non-member behaves like a
+    # churned node — no mixing, no update, frozen counter — and is
+    # additionally excluded from the consensus trace. The compiled
+    # scenario already encodes membership cancels in the schedule; the
+    # host guard below just keeps explicit `member` inputs consistent.
+    if member is None:
+        live = alive
+    else:
+        member = np.asarray(member, bool)[:n_steps]
+        if member.shape != (n_steps, n):
+            raise ValueError(f"member must cover [{n_steps}, {n}], "
+                             f"got shape {member.shape}")
+        live = alive & member
     ids = np.arange(n, dtype=np.int32)
-    # churn guard (host-side, symmetric): a pair with a down endpoint
-    # becomes self-partners -> MeshComm routes no ppermute for it
+    # churn guard (host-side, symmetric): a pair with a down or
+    # non-member endpoint becomes self-partners -> MeshComm routes no
+    # ppermute for it
     rows = np.arange(n_steps)[:, None]
-    pair_up = alive & alive[rows, partners]
+    pair_up = live & live[rows, partners]
     partners = np.where(pair_up, partners, ids)
     if corpus_layout == "unique":
         # host-side conversion, trimmed to the realized max unique count;
@@ -280,13 +301,43 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                 lda.tau, lda.alpha, eval_spec.n_particles,
                 eval_spec.layout, eval_backend)))
 
-    alive_dev = jnp.asarray(alive)
+    if save_every and checkpoint_dir is None:
+        raise ValueError("save_every > 0 needs a checkpoint_dir")
+
+    def carry_state(stats, steps, t_next):
+        # the mesh carry as a sim-layer TrainState: per-step keys are
+        # already absolute-indexed (jax.random.key(seed*100003 + t)), so
+        # (stats, steps, t) is everything a bitwise resume needs; the
+        # stored key just preserves the seed stream's flavor
+        mrow = (jnp.ones((n,), bool) if member is None
+                else jnp.asarray(member[min(t_next, n_steps) - 1]))
+        return deleda_mod.TrainState(
+            stats=jnp.asarray(stats), steps=jnp.asarray(steps),
+            key=jax.random.key(seed),
+            t=jnp.asarray(t_next, jnp.int32),
+            stats_version=jnp.asarray(t_next, jnp.int32),
+            member=mrow, cursor=jnp.zeros((), jnp.int32))
+
     stats = stats0
     steps = jnp.zeros((n,), jnp.int32)
+    t_start = 0
+    if restore_from is not None:
+        restored = deleda_mod.restore_state(restore_from,
+                                            carry_state(stats0, steps, 0))
+        stats = jax.device_put(restored.stats,
+                               NamedSharding(mesh, stats_spec))
+        steps = jnp.asarray(restored.steps)
+        t_start = int(restored.t)
+        if t_start >= n_steps:
+            raise ValueError(f"checkpoint at step {t_start} has nothing "
+                             f"left to run (n_steps={n_steps})")
+
+    alive_dev = jnp.asarray(live)
+    member_dev = None if member is None else jnp.asarray(member)
     consensus = []
     eval_lp = []
     t0 = time.time()
-    for t in range(n_steps):
+    for t in range(t_start, n_steps):
         # ---- gossip: one matching round, MeshComm ppermute routing
         stats = comm.mix_matching(stats, partners[t])
         # ---- local G-OEM updates (every live node, synchronous variant)
@@ -295,9 +346,13 @@ def run_mesh_deleda(lda: LDAConfig, words, mask, graph, n_steps: int,
                               words, mask,
                               jax.device_put(alive_dev[t], sharding))
         if t % 10 == 0 or t == n_steps - 1:
-            consensus.append(float(gossip.consensus_distance(stats)))
+            mrow = None if member_dev is None else member_dev[t]
+            consensus.append(float(gossip.consensus_distance(stats, mrow)))
         if eval_fn is not None and (t + 1) % eval_every == 0:
             eval_lp.append(np.asarray(eval_fn(stats[:probe])))
+        if save_every and (t + 1) % save_every == 0:
+            deleda_mod.save_state(checkpoint_dir,
+                                  carry_state(stats, steps, t + 1))
     # async dispatch: without the barrier the wall clock reads queueing
     # time for the tail steps, not compute time
     jax.block_until_ready(stats)
@@ -328,6 +383,14 @@ def main(argv=None):
     ap.add_argument("--mesh-shape", default=None, metavar="NODES,VOCAB",
                     help="2-D node x vocab device grid, e.g. 4,2 "
                          "(needs NODES*VOCAB devices)")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint the carried state every N rounds "
+                         "(0 = off; needs --checkpoint-dir)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for step_<t>/state.npz checkpoints")
+    ap.add_argument("--restore", default=None,
+                    help="resume from the latest committed checkpoint in "
+                         "this directory (bitwise-identical trajectory)")
     args = ap.parse_args(argv)
     mesh_shape = None
     if args.mesh_shape:
@@ -364,7 +427,9 @@ def main(argv=None):
     stats, consensus, sec = run_mesh_deleda(
         lda, corpus.words, corpus.mask, graph, args.steps, args.batch,
         args.seed, estep_backend=args.estep_backend, scenario=scenario,
-        mesh_shape=mesh_shape, corpus_layout=args.corpus_layout)
+        mesh_shape=mesh_shape, corpus_layout=args.corpus_layout,
+        save_every=args.save_every, checkpoint_dir=args.checkpoint_dir,
+        restore_from=args.restore)
     d = float(beta_distance(eta_star(stats[0]), corpus.beta_star))
     print(f"{args.steps} steps in {sec:.1f}s | consensus {consensus} "
           f"| D(beta, beta*) node0 = {d:.4f}")

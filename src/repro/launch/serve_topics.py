@@ -39,6 +39,34 @@ def _percentile(xs: list[float], q: float) -> float:
 
 def _get_stats(config: LDAConfig, args, corpus) -> LDAState:
     key = jax.random.key(args.seed)
+    if args.restore_train:
+        # serve one node of a DELEDA training run: restore the carried
+        # TrainState (lifecycle layer) and lift node i's statistic row
+        # into the single-node serving state — the post-training story of
+        # the paper, "each node answers queries from its own statistic"
+        from repro.core import deleda
+        dcfg = deleda.DeledaConfig(
+            lda=config, vocab_shards=args.restore_vocab_shards)
+        # no config= here: the serving side only knows the model shape,
+        # not the training hyperparameters, so a digest check would
+        # always warn spuriously
+        like = deleda.init_state(dcfg, key, args.restore_nodes)
+        tstate = deleda.restore_state(args.restore_train, like)
+        i = args.restore_node
+        if not 0 <= i < tstate.n_nodes:
+            raise SystemExit(f"--restore-node {i} out of range for the "
+                             f"{tstate.n_nodes}-node checkpoint")
+        if not bool(tstate.member[i]):
+            print(f"note: node {i} is not a member at step "
+                  f"{int(tstate.t)} — serving its frozen statistic")
+        state = LDAState(stats=tstate.dense_stats()[i],
+                         step=jnp.asarray(tstate.steps[i]),
+                         stats_version=jnp.asarray(tstate.stats_version))
+        print(f"restored train state: node {i}/{tstate.n_nodes} at "
+              f"round {int(tstate.t)} (local steps "
+              f"{int(tstate.steps[i])}, stats_version "
+              f"{int(tstate.stats_version)})")
+        return state
     if args.restore:
         like = init_state(config, key)
         state = restore_checkpoint(args.restore, like)
@@ -71,6 +99,17 @@ def main(argv=None):
                     help="checkpoint dir to save the trained statistic")
     ap.add_argument("--restore", default=None,
                     help="checkpoint dir to restore instead of training")
+    ap.add_argument("--restore-train", default=None, metavar="DIR",
+                    help="restore a DELEDA TrainState checkpoint "
+                         "(run_deleda/gossip_sim save_every) and serve "
+                         "one node's statistic")
+    ap.add_argument("--restore-node", type=int, default=0,
+                    help="which node's statistic to serve (--restore-train)")
+    ap.add_argument("--restore-nodes", type=int, default=50,
+                    help="node count the train checkpoint was written with")
+    ap.add_argument("--restore-vocab-shards", type=int, default=1,
+                    help="vocab_shards the train checkpoint was written "
+                         "with (the carried stats layout)")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--rate", type=float, default=200.0,
                     help="Poisson arrival rate (requests/sec)")

@@ -1,0 +1,58 @@
+"""Provenance stamps shared by bench artifacts and checkpoint sidecars.
+
+Every BENCH_*.json artifact (benchmarks/bench_util.py) and every
+checkpoint ``meta.json`` sidecar (repro/checkpoint) carries the same
+block, so anything on disk can be traced back to the exact tree, jax
+build and platform that produced it:
+
+    {"git_commit": ..., "jax_version": ..., "backend_platform": ...}
+
+``config_digest`` hashes a frozen config dataclass's repr — two configs
+digest equal iff every knob matches, which is what checkpoint restore
+uses to warn when a state.npz is being loaded under a different
+configuration than the one that wrote it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import subprocess
+
+import jax
+
+
+def provenance() -> dict:
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        commit = "unknown"
+    return dict(git_commit=commit, jax_version=jax.__version__,
+                backend_platform=jax.default_backend())
+
+
+def stamp(payload):
+    """Return a copy of ``payload`` carrying the provenance block.
+
+    dict payloads gain a "provenance" key; bare row lists are wrapped as
+    {"provenance": ..., "rows": [...]} (nothing consumes the bare-list
+    shape, the wrap keeps every artifact self-describing).
+    """
+    if isinstance(payload, list):
+        return {"provenance": provenance(), "rows": payload}
+    out = dict(payload)
+    out["provenance"] = provenance()
+    return out
+
+
+def config_digest(config) -> str:
+    """Stable short digest of a frozen config dataclass.
+
+    Frozen dataclasses repr every field deterministically, so the digest
+    changes iff some knob does. Good enough for the restore-time
+    "same config?" warning; not a wire format.
+    """
+    return hashlib.sha256(repr(config).encode()).hexdigest()[:16]

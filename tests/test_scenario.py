@@ -207,7 +207,7 @@ def test_async_steps_count_only_live_matched(corpus):
     sc = scn.Scenario(topology=seq, drop_prob=0.25, churn=0.25,
                       churn_mean_down=4.0)
     cs = sc.compile(np.random.default_rng(4))
-    sched, degs, alive = cs.run_inputs()
+    sched, degs, alive, _member = cs.run_inputs()
     cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2)
     trace = deleda.run_deleda(cfg, jax.random.key(6), corpus.words,
                               corpus.mask, sched, degs, 20,
@@ -221,7 +221,7 @@ def test_edge_sentinel_drops_no_wake(corpus):
     seq = scn.GraphSequence.static(complete_graph(10), 20)
     sc = scn.Scenario(topology=seq, kind=comm.EDGE, drop_prob=0.4)
     cs = sc.compile(np.random.default_rng(5))
-    sched, degs, alive = cs.run_inputs()
+    sched, degs, alive, _member = cs.run_inputs()
     cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=2)
     trace = deleda.run_deleda(cfg, jax.random.key(7), corpus.words,
                               corpus.mask, sched, degs, 20,
@@ -252,7 +252,7 @@ def test_scenario_comm_backends_agree(corpus):
     seq = _seq(2, 10)
     sc = scn.Scenario(topology=seq, drop_prob=0.2, churn=0.2)
     cs = sc.compile(np.random.default_rng(6))
-    sched, degs, alive = cs.run_inputs()
+    sched, degs, alive, _member = cs.run_inputs()
     traces = {}
     for backend in comm.SIM_BACKENDS:
         cfg = deleda.DeledaConfig(lda=CFG, mode="sync", batch_size=2,
@@ -291,8 +291,9 @@ def test_per_step_degrees_match_static_on_static_graph(corpus):
 
 def test_time_varying_schedule_compiles_once(corpus):
     """Static and rewired schedules (and different drop/churn masks) of
-    the same shape must hit ONE compiled run_deleda trace — dynamic
-    topologies are data, not new programs."""
+    the same shape must hit ONE compiled train_steps trace (the
+    lifecycle layer's segment executable) — dynamic topologies are data,
+    not new programs."""
     # a config signature unique to this test so the cache delta is ours
     cfg = deleda.DeledaConfig(lda=CFG, mode="async", batch_size=3)
     t = 20
@@ -300,9 +301,9 @@ def test_time_varying_schedule_compiles_once(corpus):
         topology=scn.GraphSequence.static(_ws(0), t), name="s")
     rewired = scn.Scenario(topology=_seq(4, 5), drop_prob=0.2,
                            churn=0.2, name="r")
-    with CompileCounter(deleda.run_deleda) as cc:
+    with CompileCounter(deleda.train_steps) as cc:
         for i, sc in enumerate((static, rewired)):
-            sched, degs, alive = sc.compile(
+            sched, degs, alive, _member = sc.compile(
                 np.random.default_rng(i)).run_inputs()
             deleda.run_deleda(cfg, jax.random.key(11), corpus.words,
                               corpus.mask, sched, degs, t, record_every=10,
